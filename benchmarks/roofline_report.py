@@ -1,0 +1,73 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dry-run JSONs."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def load_cells(dryrun_dir: str) -> list[dict]:
+    cells = []
+    for fn in sorted(os.listdir(dryrun_dir)):
+        if fn.endswith(".json"):
+            with open(os.path.join(dryrun_dir, fn)) as f:
+                cells.append(json.load(f))
+    return cells
+
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def render_table(dryrun_dir: str, mesh: str = "single",
+                 markdown: bool = False) -> str:
+    cells = [c for c in load_cells(dryrun_dir)
+             if (c["chips"] == 256) == (mesh == "single")]
+    cells.sort(key=lambda c: (c["arch"], SHAPE_ORDER.get(c["shape"], 9)))
+    sep = " | " if markdown else "  "
+    hdr = ["arch", "shape", "t_comp(s)", "t_mem(s)", "t_coll(s)",
+           "bound", "useful", "roofline%"]
+    lines = []
+    if markdown:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    else:
+        lines.append(f"{hdr[0]:18s}{sep}{hdr[1]:12s}{sep}{hdr[2]:>10s}{sep}"
+                     f"{hdr[3]:>10s}{sep}{hdr[4]:>10s}{sep}{hdr[5]:>10s}"
+                     f"{sep}{hdr[6]:>7s}{sep}{hdr[7]:>9s}")
+    for c in cells:
+        row = [c["arch"], c["shape"],
+               f"{c['t_compute_s']:.4g}", f"{c['t_memory_s']:.4g}",
+               f"{c['t_collective_s']:.4g}", c["dominant"],
+               f"{c['useful_flops_ratio']:.3f}",
+               f"{100*c.get('roofline_fraction', 0):.2f}%"]
+        if markdown:
+            lines.append("| " + " | ".join(row) + " |")
+        else:
+            lines.append(f"{row[0]:18s}{sep}{row[1]:12s}{sep}{row[2]:>10s}"
+                         f"{sep}{row[3]:>10s}{sep}{row[4]:>10s}{sep}"
+                         f"{row[5]:>10s}{sep}{row[6]:>7s}{sep}{row[7]:>9s}")
+    return "\n".join(lines)
+
+
+def render_detail(cell: dict) -> str:
+    out = [f"### {cell['arch']} x {cell['shape']} ({cell['chips']} chips)"]
+    out.append(f"- FLOPs/device: {cell['flops_per_device']:.3e} "
+               f"(model: {cell['model_flops_per_device']:.3e}, "
+               f"useful ratio {cell['useful_flops_ratio']:.3f})")
+    out.append(f"- bytes/device: {cell['bytes_per_device']:.3e}")
+    out.append(f"- collective bytes/device: "
+               f"{cell['collective_bytes_per_device']:.3e} "
+               f"{cell['collective_counts']}")
+    out.append(f"- terms: compute {cell['t_compute_s']:.4g}s | memory "
+               f"{cell['t_memory_s']:.4g}s | collective "
+               f"{cell['t_collective_s']:.4g}s -> dominant: "
+               f"**{cell['dominant']}**")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    print(render_table(d, mesh="single"))
+    print()
+    print(render_table(d, mesh="multi"))

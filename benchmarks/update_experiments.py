@@ -1,0 +1,61 @@
+"""Inject the dry-run summary + roofline tables into EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m benchmarks.update_experiments [dryrun_dir]
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+from benchmarks.roofline_report import load_cells, render_table
+
+
+def dryrun_summary(dryrun_dir: str) -> str:
+    cells = load_cells(dryrun_dir)
+    singles = [c for c in cells if c["chips"] == 256]
+    multis = [c for c in cells if c["chips"] == 512]
+    lines = [
+        f"Compiled cells: **{len(singles)} single-pod + {len(multis)} "
+        f"multi-pod = {len(cells)}** (all runnable cells on both meshes).",
+        "",
+        "| arch | shape | mesh | µbatches | temps/dev (GiB) | args/dev (GiB) | compile (s) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"],
+                                          c["chips"])):
+        mesh = "2x16x16" if c["chips"] == 512 else "16x16"
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {mesh} | "
+            f"{c.get('microbatches', '-')} | "
+            f"{c.get('temp_size_in_bytes', 0)/2**30:.1f} | "
+            f"{c.get('argument_size_in_bytes', 0)/2**30:.1f} | "
+            f"{c.get('compile_seconds', 0):.0f} |")
+    return "\n".join(lines)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+
+    summary = dryrun_summary(d)
+    table_s = render_table(d, mesh="single", markdown=True)
+    table_m = render_table(d, mesh="multi", markdown=True)
+    roof = ("### Single-pod (16x16 = 256 chips)\n\n" + table_s +
+            "\n\n### Multi-pod (2x16x16 = 512 chips)\n\n" + table_m)
+
+    text = re.sub(r"<!-- DRYRUN_SUMMARY -->.*?(?=\n## )",
+                  "<!-- DRYRUN_SUMMARY -->\n" + summary + "\n\n",
+                  text, flags=re.S)
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n## )",
+                  "<!-- ROOFLINE_TABLE -->\n" + roof + "\n\n",
+                  text, flags=re.S)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated from", d)
+
+
+if __name__ == "__main__":
+    main()

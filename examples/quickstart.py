@@ -1,0 +1,33 @@
+"""Quickstart: the paper's solver in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from repro.core import solve_iccg
+from repro.core.matrices import laplace_2d
+
+
+def main():
+    # 2-D Poisson problem, 64x64 grid
+    a = laplace_2d(64, 64)
+    b = np.random.default_rng(0).normal(size=a.shape[0])
+
+    print(f"n = {a.shape[0]}, nnz = {a.nnz}")
+    for method in ("mc", "bmc", "hbmc"):
+        rep = solve_iccg(a, b, method=method, block_size=16, w=8, rtol=1e-7)
+        print(f"{method:5s}: {rep.result.iterations:4d} iterations, "
+              f"relres {rep.result.relres:.2e}, "
+              f"{rep.n_colors} colors, {rep.n_rounds} sequential rounds, "
+              f"lane occupancy {rep.lane_occupancy*100:.1f}%")
+    print("\nBMC and HBMC iterate identically (the paper's equivalence "
+          "theorem); HBMC additionally exposes w-wide vector lanes per "
+          "round for the TPU VPU.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""The paper's idea beyond its domain: vectorizing an RNN recurrence.
+
+The RG-LRU recurrence  h_t = a_t * h_{t-1} + b_t  (RecurrentGemma) is the
+forward substitution of a bidiagonal lower-triangular system
+
+    L h = b,   L = I - shift(diag(a)).
+
+A *single* chain admits no equivalent reordering (every edge fixes the
+order: the ER condition pins the natural order), so HBMC cannot break the
+sequential dependence — the paper's technique is about *exploiting existing
+independence*, not creating it.  But a batch of B independent chains is
+exactly a B-block, one-color HBMC instance: the secondary reordering
+interleaves the chains lane-major (b_s = T, w = B), turning T*B scalar
+steps into T rounds of B-wide vector work — with bit-exact results
+(equivalent reordering).  Within a chain, the complementary trick is the
+*associative scan* (O(log T) depth), which RecurrentGemma uses and which
+this repo's RG-LRU layer implements.
+
+    PYTHONPATH=src python examples/rnn_as_trisolve.py
+"""
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core.sell import pack_steps
+from repro.core.trisolve import DeviceTables, forward_solve
+
+
+def main():
+    rng = np.random.default_rng(0)
+    B, T = 8, 512
+    a = rng.uniform(0.5, 0.99, size=(B, T))   # gates
+    b = rng.normal(size=(B, T))
+
+    # --- reference: sequential recurrence, chain by chain ----------------
+    t0 = time.perf_counter()
+    h_seq = np.zeros((B, T))
+    for i in range(B):
+        h = 0.0
+        for t in range(T):
+            h = a[i, t] * h + b[i, t]
+            h_seq[i, t] = h
+    t_seq = time.perf_counter() - t0
+
+    # --- HBMC view: B chains = B blocks of one color, w = B lanes --------
+    # lane-major (round-major) order: index(t, i) = t*B + i
+    n = B * T
+    rows_sub = np.arange(1, T)[:, None] * B + np.arange(B)[None, :]
+    cols_sub = rows_sub - B
+    tri = sp.coo_matrix(
+        (-a[:, 1:].T.ravel(), (rows_sub.ravel(), cols_sub.ravel())),
+        shape=(n, n)).tocsr()
+    diag = np.ones(n)
+    rounds = [np.arange(t * B, (t + 1) * B) for t in range(T)]  # T rounds
+    tables = pack_steps(tri, diag, rounds)
+    dev = DeviceTables.from_host(tables)
+    q = jnp.asarray(b.T.ravel())               # lane-major RHS
+    h_hbmc = np.asarray(forward_solve(dev, q)).reshape(T, B).T
+    forward_solve(dev, q)                      # warm
+    t0 = time.perf_counter()
+    forward_solve(dev, q).block_until_ready()
+    t_hbmc = time.perf_counter() - t0
+
+    # --- associative scan (intra-chain parallelism) ----------------------
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    scan = jax.jit(lambda aa, bb: jax.lax.associative_scan(
+        combine, (aa, bb), axis=1)[1])
+    h_scan = np.asarray(scan(aj, bj))
+    t0 = time.perf_counter()
+    scan(aj, bj).block_until_ready()
+    t_scan = time.perf_counter() - t0
+
+    print(f"B={B} chains, T={T} steps")
+    print(f"sequential python       : {t_seq*1e3:8.2f} ms "
+          f"({B*T} scalar steps)")
+    print(f"HBMC lane-major solve   : {t_hbmc*1e3:8.2f} ms "
+          f"({T} rounds x {B} lanes)  max|err| = "
+          f"{np.abs(h_hbmc-h_seq).max():.2e}")
+    print(f"associative scan        : {t_scan*1e3:8.2f} ms "
+          f"(log2(T)={int(np.log2(T))} levels)   max|err| = "
+          f"{np.abs(h_scan-h_seq).max():.2e}")
+    print("\nHBMC exposes *existing* independence (batch lanes) with exact "
+          "equivalence; the associative scan creates intra-chain "
+          "parallelism algebraically.  RecurrentGemma production code uses "
+          "both (see repro/models/rglru.py).")
+
+
+if __name__ == "__main__":
+    main()

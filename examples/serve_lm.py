@@ -1,0 +1,54 @@
+"""Batched serving demo: prefill a batch of prompts token-parallel, then
+greedy-decode continuations with ring-buffer/recurrent caches.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x22b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import init_params
+from repro.serve.step import greedy_generate, prefill, serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x22b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    if cfg.takes_embeddings:
+        prompt = jax.random.normal(
+            jax.random.PRNGKey(1),
+            (args.batch, args.prompt_len, cfg.d_model)) * 0.3
+        print("frontend-stub arch: prompt = precomputed embeddings")
+        cache, logits = prefill(params, cfg, prompt,
+                                max_len=args.prompt_len + args.new_tokens,
+                                cache_dtype=jnp.float32)
+        print(f"prefill logits: {logits.shape}; decode loop skipped for "
+              f"stub frontends (needs a tokenizer round-trip)")
+        return
+
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len), 0, cfg.vocab)
+    t0 = time.perf_counter()
+    out = greedy_generate(params, cfg, prompt, n_new=args.new_tokens,
+                          max_len=args.prompt_len + args.new_tokens,
+                          cache_dtype=jnp.float32)
+    dt = time.perf_counter() - t0
+    print(f"arch={cfg.name}  batch={args.batch}  "
+          f"prompt={args.prompt_len}  new={args.new_tokens}")
+    print(f"generated token ids:\n{out}")
+    print(f"{args.batch * args.new_tokens / dt:.1f} tok/s "
+          f"(CPU, smoke config, includes compile)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Step-atomic, mesh-agnostic checkpointing (msgpack + zstd).
+
+Fault-tolerance contract:
+  * **atomic** — written to ``<dir>/tmp.<step>`` then renamed; a crash
+    mid-write never corrupts the latest checkpoint;
+  * **self-verifying** — every leaf carries a crc32; load fails loudly on
+    bit rot;
+  * **mesh-agnostic / elastic** — leaves are saved as full logical arrays
+    (gathered host-side), so a checkpoint written on a 256-chip mesh
+    restores onto 512 chips (or a different DP/TP split) by just applying
+    the new shardings on load — this is the elastic-rescale path;
+  * **resumable stream** — the data pipeline is stateless-indexed, so
+    persisting ``step`` alone resumes the exact data order.
+
+At real cluster scale leaves would stream per-shard to a parallel
+filesystem; the single-file host-gather here keeps the same API surface.
+"""
+from __future__ import annotations
+
+import os
+import zlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _flatten(tree) -> tuple[list[tuple[str, Any]], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def save_checkpoint(path: str, tree, step: int) -> str:
+    os.makedirs(path, exist_ok=True)
+    leaves, _ = _flatten(tree)
+    payload = {"step": step, "leaves": {}}
+    for key, leaf in leaves:
+        arr = np.asarray(leaf)
+        buf = arr.tobytes()
+        payload["leaves"][key] = {
+            "dtype": str(arr.dtype), "shape": list(arr.shape),
+            "crc": zlib.crc32(buf), "data": buf,
+        }
+    raw = msgpack.packb(payload, use_bin_type=True)
+    comp = zstandard.ZstdCompressor(level=3).compress(raw)
+    tmp = os.path.join(path, f"tmp.{step}")
+    final = os.path.join(path, f"step_{step:08d}.ckpt")
+    with open(tmp, "wb") as f:
+        f.write(comp)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, final)
+    _write_latest(path, final)
+    return final
+
+
+def _write_latest(path: str, final: str):
+    tmp = os.path.join(path, "LATEST.tmp")
+    with open(tmp, "w") as f:
+        f.write(os.path.basename(final))
+    os.rename(tmp, os.path.join(path, "LATEST"))
+
+
+def latest_checkpoint(path: str) -> str | None:
+    marker = os.path.join(path, "LATEST")
+    if not os.path.exists(marker):
+        return None
+    with open(marker) as f:
+        name = f.read().strip()
+    full = os.path.join(path, name)
+    return full if os.path.exists(full) else None
+
+
+def load_checkpoint(file: str, like_tree, shardings=None) -> tuple[Any, int]:
+    """Restore into the structure of ``like_tree`` (values ignored).  Pass
+    ``shardings`` (same structure) to place leaves onto a (possibly
+    different) mesh — the elastic-rescale path."""
+    with open(file, "rb") as f:
+        raw = zstandard.ZstdDecompressor().decompress(f.read())
+    payload = msgpack.unpackb(raw, raw=False)
+    leaves, treedef = _flatten(like_tree)
+    shard_leaves = (None if shardings is None
+                    else treedef.flatten_up_to(shardings))
+    out = []
+    for i, (key, like) in enumerate(leaves):
+        rec = payload["leaves"].get(key)
+        if rec is None:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        buf = rec["data"]
+        if zlib.crc32(buf) != rec["crc"]:
+            raise IOError(f"crc mismatch on leaf {key} (corrupt checkpoint)")
+        arr = np.frombuffer(buf, dtype=rec["dtype"]).reshape(rec["shape"])
+        if shard_leaves is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), payload["step"]

@@ -1,0 +1,17 @@
+"""Core library: the paper's contribution (HBMC ordering + parallel ICCG)."""
+from .coloring import (BMCOrdering, MCOrdering, block_multicolor_ordering,
+                       multicolor_ordering, pad_system)
+from .graph import check_er_condition, invert_perm, ordering_digraph_edges, permute_system
+from .hbmc import (HBMCOrdering, hbmc_from_bmc, hbmc_ordering,
+                   pad_system_hbmc, verify_level2_structure)
+from .ic0 import ic0, ic0_error, sequential_ic_solve
+from .iccg import PCGResult, pcg, spmv_ell, spmv_sell
+from .matrices import PAPER_PROBLEMS, PAPER_SHIFTS, paper_problem
+from .sell import (SellMatrix, StepTables, pack_ell, pack_factor,
+                   pack_factor_hbmc, pack_sell, pack_steps, rounds_bmc,
+                   rounds_hbmc, rounds_mc, rounds_natural)
+from .smoothers import GSSmoother, build_gs_smoother, gs_solve
+from .solvers import ICCGReport, solve_iccg
+from .trisolve import (DeviceTables, HBMCPreconditioner, backward_solve,
+                       build_preconditioner, build_preconditioner_from_rounds,
+                       forward_solve, sequential_backward, sequential_forward)

@@ -1,0 +1,194 @@
+"""Nodal multi-color (MC) and algebraic block multi-color (BMC) orderings.
+
+MC: greedy coloring of the matrix adjacency graph; unknowns ordered by
+(color, original index).
+
+BMC (Iwashita, Nakashima, Takahashi, IPDPS 2012): unknowns are first grouped
+into blocks of size ``b_s`` with the *simplest heuristic* from that paper (the
+one the HBMC paper says it uses): the unknown with the minimal number among
+unassigned ones seeds a new block, and the block is grown greedily across
+adjacent unassigned unknowns (minimal index first).  The quotient (block)
+graph is then greedy-colored, and unknowns are ordered by
+(block color, block id, position inside block).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import scipy.sparse as sp
+
+from .graph import adjacency_lists
+
+
+def greedy_color(indptr: np.ndarray, indices: np.ndarray, n: int,
+                 order: np.ndarray | None = None) -> np.ndarray:
+    """Greedy (first-fit) coloring.  Returns color id per node (0-based)."""
+    colors = np.full(n, -1, dtype=np.int64)
+    scratch = np.full(n, -1, dtype=np.int64)  # color -> last node that used it
+    seq = np.arange(n) if order is None else order
+    for v in seq:
+        for u in indices[indptr[v]:indptr[v + 1]]:
+            cu = colors[u]
+            if cu >= 0:
+                scratch[cu] = v
+        c = 0
+        while scratch[c] == v:
+            c += 1
+        colors[v] = c
+    return colors
+
+
+@dataclasses.dataclass(frozen=True)
+class MCOrdering:
+    """Nodal multi-color ordering."""
+    perm: np.ndarray          # perm[old] = new
+    colors: np.ndarray        # color of each *old* unknown
+    n_colors: int
+    color_counts: np.ndarray  # unknowns per color, in new order
+
+
+def multicolor_ordering(a: sp.spmatrix) -> MCOrdering:
+    n = a.shape[0]
+    indptr, indices = adjacency_lists(a)
+    colors = greedy_color(indptr, indices, n)
+    n_colors = int(colors.max()) + 1
+    # stable sort by color keeps original order inside each color
+    new_order = np.argsort(colors, kind="stable")   # new -> old
+    perm = np.empty(n, dtype=np.int64)
+    perm[new_order] = np.arange(n)
+    counts = np.bincount(colors, minlength=n_colors)
+    return MCOrdering(perm=perm, colors=colors, n_colors=n_colors,
+                      color_counts=counts)
+
+
+@dataclasses.dataclass(frozen=True)
+class BMCOrdering:
+    """Algebraic block multi-color ordering.
+
+    Unknown layout in the new order: colors ascending; inside a color its
+    blocks consecutively (``block_size`` unknowns each, padded with dummy
+    unknowns so every block is exactly ``block_size`` long); inside a block
+    the original relative order is preserved.
+
+    ``perm`` maps old index -> new index over the *padded* system of size
+    ``n_padded = n_blocks_total * block_size``.  Dummy slots are the padded
+    tail of each block; ``is_dummy`` marks them in the new order.
+    """
+    perm: np.ndarray
+    n: int
+    n_padded: int
+    block_size: int
+    n_colors: int
+    block_color: np.ndarray        # color of each block
+    blocks_per_color: np.ndarray   # number of blocks in each color
+    block_of_new: np.ndarray       # block id (global, color-major) per new idx
+    is_dummy: np.ndarray           # bool per new index
+
+
+def _build_blocks(a: sp.spmatrix, block_size: int) -> list[list[int]]:
+    """Min-index-seeded greedy block growing (2012 paper, simplest heuristic)."""
+    n = a.shape[0]
+    indptr, indices = adjacency_lists(a)
+    assigned = np.zeros(n, dtype=bool)
+    blocks: list[list[int]] = []
+    # frontier-based growth: keep candidate set of neighbors of current block
+    import heapq
+    next_seed = 0
+    while True:
+        while next_seed < n and assigned[next_seed]:
+            next_seed += 1
+        if next_seed >= n:
+            break
+        blk = [next_seed]
+        assigned[next_seed] = True
+        heap: list[int] = []
+        in_heap = set()
+        for u in indices[indptr[next_seed]:indptr[next_seed + 1]]:
+            if not assigned[u] and u not in in_heap:
+                heapq.heappush(heap, int(u)); in_heap.add(int(u))
+        while len(blk) < block_size and heap:
+            v = heapq.heappop(heap)
+            if assigned[v]:
+                continue
+            blk.append(v)
+            assigned[v] = True
+            for u in indices[indptr[v]:indptr[v + 1]]:
+                u = int(u)
+                if not assigned[u] and u not in in_heap:
+                    heapq.heappush(heap, u); in_heap.add(u)
+        blk.sort()  # preserve original relative order inside the block
+        blocks.append(blk)
+    return blocks
+
+
+def block_multicolor_ordering(a: sp.spmatrix, block_size: int) -> BMCOrdering:
+    n = a.shape[0]
+    blocks = _build_blocks(a, block_size)
+    nb = len(blocks)
+    # quotient graph over blocks
+    block_of = np.empty(n, dtype=np.int64)
+    for bi, blk in enumerate(blocks):
+        for v in blk:
+            block_of[v] = bi
+    indptr, indices = adjacency_lists(a)
+    # block adjacency via edge contraction
+    coo_rows = np.repeat(np.arange(n), np.diff(indptr))
+    br, bc = block_of[coo_rows], block_of[indices]
+    mask = br != bc
+    badj = sp.coo_matrix(
+        (np.ones(mask.sum(), dtype=np.int8), (br[mask], bc[mask])),
+        shape=(nb, nb)).tocsr()
+    badj.sum_duplicates()
+    bcolors = greedy_color(badj.indptr, badj.indices, nb)
+    n_colors = int(bcolors.max()) + 1
+
+    # order blocks by (color, block id)
+    border = np.argsort(bcolors, kind="stable")  # new block pos -> old block id
+    blocks_per_color = np.bincount(bcolors, minlength=n_colors)
+
+    n_padded = nb * block_size
+    perm = np.full(n, -1, dtype=np.int64)
+    block_of_new = np.empty(n_padded, dtype=np.int64)
+    is_dummy = np.zeros(n_padded, dtype=bool)
+    pos = 0
+    for newb, oldb in enumerate(border):
+        blk = blocks[oldb]
+        block_of_new[pos:pos + block_size] = newb
+        for j, v in enumerate(blk):
+            perm[v] = pos + j
+        if len(blk) < block_size:
+            is_dummy[pos + len(blk):pos + block_size] = True
+        pos += block_size
+    block_color = bcolors[border]
+    return BMCOrdering(
+        perm=perm, n=n, n_padded=n_padded, block_size=block_size,
+        n_colors=n_colors, block_color=block_color,
+        blocks_per_color=blocks_per_color, block_of_new=block_of_new,
+        is_dummy=is_dummy)
+
+
+def pad_system(a: sp.spmatrix, b: np.ndarray | None, ordering: BMCOrdering
+               ) -> tuple[sp.csr_matrix, np.ndarray | None]:
+    """Apply a BMC ordering, embedding the system into the padded size.
+
+    Dummy unknowns get a 1.0 diagonal and zero RHS; they never couple to real
+    unknowns, so the Krylov process on the padded system reproduces the
+    original one exactly.
+    """
+    n, npad = ordering.n, ordering.n_padded
+    coo = sp.coo_matrix(a)
+    p = ordering.perm
+    rows = p[coo.row]
+    cols = p[coo.col]
+    data = coo.data.astype(np.float64)
+    dummy_idx = np.nonzero(ordering.is_dummy)[0]
+    rows = np.concatenate([rows, dummy_idx])
+    cols = np.concatenate([cols, dummy_idx])
+    data = np.concatenate([data, np.ones(len(dummy_idx))])
+    a_bar = sp.coo_matrix((data, (rows, cols)), shape=(npad, npad)).tocsr()
+    b_bar = None
+    if b is not None:
+        b_bar = np.zeros(npad, dtype=np.float64)
+        b_bar[p] = np.asarray(b, dtype=np.float64)
+    return a_bar, b_bar

@@ -1,0 +1,99 @@
+"""Shifted IC(0) — zero-fill incomplete Cholesky factorization (paper §2).
+
+A ~= L L^T where L is lower triangular with the same nonzero pattern as the
+lower triangular part of A.  The *shifted* variant factorizes
+diag-scaled  A + alpha diag(A)  (paper §5.1 uses alpha = 0.3 for Ieej) which
+guards against breakdown on semi-definite systems.
+
+This is host-side setup code (numpy; one-time cost amortized over the CG
+iterations), exactly as the reordering itself.  The factor is returned in CSR
+so the SELL packing (``sell.py``) can slice it per HBMC step.
+"""
+from __future__ import annotations
+
+import numpy as np
+import scipy.sparse as sp
+
+
+def ic0(a: sp.spmatrix, shift: float = 0.0, breakdown_eps: float = 1e-13
+        ) -> sp.csr_matrix:
+    """Return L (CSR, lower triangular incl. diagonal) with A ~= L L^T.
+
+    Row-oriented up-looking factorization restricted to pattern(tril(A)).
+    Sorted-merge intersection of row patterns keeps it O(sum row^2) which is
+    fine for the stencil-type matrices used in the paper.
+    """
+    a = sp.csr_matrix(a).astype(np.float64)
+    n = a.shape[0]
+    low = sp.tril(a, format="csr")
+    low.sort_indices()
+    indptr, indices, data = low.indptr, low.indices, low.data.copy()
+    if shift != 0.0:
+        diag = a.diagonal()
+        for i in range(n):
+            last = indptr[i + 1] - 1
+            # diagonal is the last entry of the sorted lower row
+            data[last] = diag[i] * (1.0 + shift)
+
+    # L rows stored as (col array, val array), built in place over `data`
+    lcols: list[np.ndarray] = [None] * n  # type: ignore[list-item]
+    lvals: list[np.ndarray] = [None] * n  # type: ignore[list-item]
+    diag_l = np.empty(n, dtype=np.float64)
+
+    for i in range(n):
+        s, e = indptr[i], indptr[i + 1]
+        cols_i = indices[s:e]
+        vals_i = data[s:e]
+        if cols_i[-1] != i:
+            raise ValueError(f"missing diagonal in row {i}")
+        row_vals = np.empty(e - s, dtype=np.float64)
+        for t in range(e - s):
+            j = cols_i[t]
+            v = vals_i[t]
+            # v -= sum_k l_ik * l_jk over shared k < j (merge of sorted rows)
+            cj, vj = (lcols[j], lvals[j]) if j < i else (cols_i[:t], row_vals[:t])
+            ci, vi = cols_i[:t], row_vals[:t]
+            pi = pj = 0
+            acc = 0.0
+            li, lj = len(ci), len(cj)
+            while pi < li and pj < lj:
+                a_, b_ = ci[pi], cj[pj]
+                if a_ == b_:
+                    if a_ >= j:
+                        break
+                    acc += vi[pi] * vj[pj]
+                    pi += 1; pj += 1
+                elif a_ < b_:
+                    pi += 1
+                else:
+                    pj += 1
+            v -= acc
+            if j < i:
+                row_vals[t] = v / diag_l[j]
+            else:  # diagonal
+                if v <= breakdown_eps:
+                    v = breakdown_eps  # breakdown guard
+                row_vals[t] = np.sqrt(v)
+                diag_l[i] = row_vals[t]
+        lcols[i] = cols_i
+        lvals[i] = row_vals
+        data[s:e] = row_vals
+
+    return sp.csr_matrix((data, indices, indptr), shape=(n, n))
+
+
+def ic0_error(a: sp.spmatrix, l: sp.csr_matrix) -> float:
+    """|| proj_pattern(A - L L^T) ||_F / ||A||_F — zero for exact IC(0) on the
+    pattern (sanity check used by tests)."""
+    a = sp.csr_matrix(a).astype(np.float64)
+    prod = (l @ l.T).tocsr()
+    pattern = (a != 0)
+    diff = (a - prod.multiply(pattern))
+    return float(sp.linalg.norm(diff) / sp.linalg.norm(a))
+
+
+def sequential_ic_solve(l: sp.csr_matrix, r: np.ndarray) -> np.ndarray:
+    """Oracle preconditioner application z = (L L^T)^{-1} r, sequential scipy."""
+    y = sp.linalg.spsolve_triangular(l.tocsr(), r, lower=True)
+    z = sp.linalg.spsolve_triangular(l.T.tocsr(), y, lower=False)
+    return z

@@ -1,0 +1,136 @@
+"""Distribution of the HBMC ICCG solver over a device mesh.
+
+Parallel-ordering semantics map onto the mesh exactly as the paper maps them
+onto threads (§4.4.3), one level up:
+
+    color      -> sequential rounds (the fori_loop over steps)
+    level-1 blocks of a color -> *devices* (the `data` mesh axis): the step
+                  tables' lane axis R is sharded, so each device owns a
+                  contiguous batch of level-1 blocks
+    w lanes    -> VPU vector lanes within a device
+
+Per round, every device solves its lanes locally (gathering from its copy
+of y) and the lane updates are all-gathered — the distributed analogue of
+the "one synchronization per color" property.  The vector y is replicated;
+the tables (the heavy data: vals/cols) are fully sharded.  This is the
+general-sparsity fallback; a structured-grid build could replace the
+all-gather with neighbor collective_permutes (see DESIGN.md §5).
+
+Everything is expressed with jit + NamedSharding: XLA SPMD inserts the
+all-gathers, which the dry-run roofline then accounts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .trisolve import DeviceTables, forward_solve, backward_solve
+from .iccg import pcg, spmv_ell
+
+
+def shard_tables(tables: DeviceTables, mesh: Mesh, axis: str = "data"
+                 ) -> DeviceTables:
+    """Shard the lane axis (R) of the step tables over ``axis``.
+
+    R is padded to a multiple of the axis size (padding lanes follow the
+    scratch-slot convention and are inert).
+    """
+    n_dev = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    s, r = tables.dinv.shape
+    rpad = (-r) % n_dev
+    if rpad:
+        pad2 = lambda a, fill: jnp.pad(a, ((0, 0), (0, rpad)),
+                                       constant_values=fill)
+        pad3 = lambda a, fill: jnp.pad(a, ((0, 0), (0, rpad), (0, 0)),
+                                       constant_values=fill)
+        tables = DeviceTables(
+            rows=pad2(tables.rows, tables.n_slots - 1),
+            cols=pad3(tables.cols, tables.n_slots - 1),
+            vals=pad3(tables.vals, 0.0),
+            dinv=pad2(tables.dinv, 0.0),
+            n_slots=tables.n_slots)
+    sh2 = NamedSharding(mesh, P(None, axis))
+    sh3 = NamedSharding(mesh, P(None, axis, None))
+    return DeviceTables(
+        rows=jax.device_put(tables.rows, sh2),
+        cols=jax.device_put(tables.cols, sh3),
+        vals=jax.device_put(tables.vals, sh3),
+        dinv=jax.device_put(tables.dinv, sh2),
+        n_slots=tables.n_slots)
+
+
+def distributed_iccg(a_ell_cols, a_ell_vals, fwd: DeviceTables,
+                     bwd: DeviceTables, b, mesh: Mesh, *, rtol=1e-7,
+                     maxiter=10_000, axis: str = "data"):
+    """Run PCG with the triangular solves and SpMV sharded over ``axis``."""
+    fwd_s = shard_tables(fwd, mesh, axis)
+    bwd_s = shard_tables(bwd, mesh, axis)
+    rep = NamedSharding(mesh, P())
+    row_sh = NamedSharding(mesh, P(axis, None))
+    n = b.shape[0]
+    n_dev = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    rpad = (-n) % n_dev
+    cols_p = jnp.pad(a_ell_cols, ((0, rpad), (0, 0)))
+    vals_p = jnp.pad(a_ell_vals, ((0, rpad), (0, 0)))
+    cols_d = jax.device_put(cols_p, row_sh)
+    vals_d = jax.device_put(vals_p, row_sh)
+    b_d = jax.device_put(b, rep)
+
+    def spmv(x):
+        y = spmv_ell(vals_d, cols_d, jnp.pad(x, (0, rpad)))
+        return jax.lax.with_sharding_constraint(y[:n], rep)
+
+    def precond(r):
+        y = forward_solve(fwd_s, r)
+        z = backward_solve(bwd_s, y)
+        return jax.lax.with_sharding_constraint(z, rep)
+
+    with mesh:
+        return pcg(spmv, precond, b_d, rtol=rtol, maxiter=maxiter)
+
+
+def lower_solver_step(fwd: DeviceTables, bwd: DeviceTables,
+                      a_ell_cols, a_ell_vals, mesh: Mesh, axis="data"):
+    """Lower one PCG iteration on the production mesh (dry-run bonus cell:
+    the paper's own kernel under the multi-pod roofline).
+
+    Requires n and R to be multiples of the axis size (arrange via the HBMC
+    block/w parameters).
+    """
+    rep = NamedSharding(mesh, P())
+    n = fwd.n_slots - 1
+    assert a_ell_cols.shape[0] == n
+
+    def one_iteration(x, r, p, vals, cols, fwd_t, bwd_t):
+        ap = spmv_ell(vals, cols, p)
+        alpha = jnp.vdot(r, r) / jnp.vdot(p, ap)
+        x = x + alpha * p
+        r2 = r - alpha * ap
+        y = forward_solve(fwd_t, r2)
+        z = backward_solve(bwd_t, y)
+        beta = jnp.vdot(r2, z) / jnp.vdot(r, r)
+        return x, r2, z + beta * p
+
+    sds = lambda a, sh: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=sh)
+    row_sh = NamedSharding(mesh, P(axis, None))
+    sh2 = NamedSharding(mesh, P(None, axis))
+    sh3 = NamedSharding(mesh, P(None, axis, None))
+    vec = jax.ShapeDtypeStruct((n,), fwd.vals.dtype, sharding=rep)
+
+    with mesh:
+        jitted = jax.jit(one_iteration)
+        lowered = jitted.lower(
+            vec, vec, vec,
+            sds(a_ell_vals, row_sh), sds(a_ell_cols, row_sh),
+            _abstract_tables(fwd, sh2, sh3),
+            _abstract_tables(bwd, sh2, sh3))
+    return lowered
+
+
+def _abstract_tables(t: DeviceTables, sh2, sh3) -> DeviceTables:
+    sds = lambda a, sh: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=sh)
+    return DeviceTables(rows=sds(t.rows, sh2), cols=sds(t.cols, sh3),
+                        vals=sds(t.vals, sh3), dinv=sds(t.dinv, sh2),
+                        n_slots=t.n_slots)

@@ -1,0 +1,214 @@
+"""SELL-w packing of the HBMC-ordered triangular factors (paper §4.4.2).
+
+The paper stores L/U in sliced-ELL with slice size = w so each vectorized
+round loads w contiguous rows.  On TPU we take the same idea one step
+further: all rows belonging to one *global round* (color c, round l) are
+mutually independent, so we pack them into one dense padded tile
+
+    rows : (R,)      final row indices of the round     (pad -> n_slots-1)
+    cols : (R, K)    column indices of off-diag entries (pad -> n_slots-1)
+    vals : (R, K)    matching values                    (pad -> 0.0)
+    dinv : (R,)      1 / diagonal                       (pad -> 0.0)
+
+and stack the rounds:  S = n_c * b_s  sequential steps.  The substitution is
+then a fixed-shape ``lax.fori_loop`` over S steps of fully dense gather/fma
+work — the TPU analogue of "w-wide SIMD per round, one thread sync per color".
+
+Padding scheme: index ``n_slots-1`` is a scratch slot whose value is always
+read as garbage*0.0 (pad vals are zero) and written as 0.0 (pad dinv is
+zero), so padded lanes are harmless.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import scipy.sparse as sp
+
+from .hbmc import HBMCOrdering
+
+
+@dataclasses.dataclass
+class StepTables:
+    """Host-side packed tables; converted to jnp on first use."""
+    rows: np.ndarray   # (S, R) int32
+    cols: np.ndarray   # (S, R, K) int32
+    vals: np.ndarray   # (S, R, K) f64
+    dinv: np.ndarray   # (S, R) f64
+    n_slots: int       # n_final + 1 (scratch slot at the end)
+    # per-step live row count (R_s <= R), for occupancy accounting
+    live: np.ndarray   # (S,) int32
+
+    @property
+    def shape(self):
+        return self.rows.shape + (self.cols.shape[-1],)
+
+
+def rounds_hbmc(ordering: HBMCOrdering, reverse: bool = False
+                ) -> list[np.ndarray]:
+    """Final row indices of every global round (c, l), in execution order."""
+    b_s, w = ordering.block_size, ordering.w
+    out = []
+    colors = range(ordering.n_colors)
+    for c in colors:
+        base = int(ordering.color_start[c])
+        nlev1 = int(ordering.lev1_per_color[c])
+        k = np.arange(nlev1)[:, None]          # level-1 block within color
+        j = np.arange(w)[None, :]              # lane
+        for l in range(b_s):                   # round inside level-1 block
+            rows = (base + k * (b_s * w) + l * w + j).ravel()
+            out.append(rows)
+    if reverse:
+        out = out[::-1]
+    return out
+
+
+def rounds_bmc(bmc, reverse: bool = False) -> list[np.ndarray]:
+    """Rounds for plain BMC: round (c, t) = t-th unknown of every block of
+    color c.  Mathematically identical iteration to the sequential in-block
+    sweep (blocks of one color are independent); this is what makes the BMC
+    iteration-count comparison meaningful on the same machinery."""
+    b_s = bmc.block_size
+    color_start = np.concatenate([[0], np.cumsum(bmc.blocks_per_color * b_s)])
+    out = []
+    for c in range(bmc.n_colors):
+        base = int(color_start[c])
+        nb = int(bmc.blocks_per_color[c])
+        k = np.arange(nb)
+        for t in range(b_s):
+            out.append(base + k * b_s + t)
+    if reverse:
+        out = out[::-1]
+    return out
+
+
+def rounds_mc(mc, reverse: bool = False) -> list[np.ndarray]:
+    """Rounds for nodal multi-color ordering: one round per color."""
+    start = np.concatenate([[0], np.cumsum(mc.color_counts)])
+    out = [np.arange(start[c], start[c + 1]) for c in range(mc.n_colors)]
+    if reverse:
+        out = out[::-1]
+    return out
+
+
+def rounds_natural(n: int, reverse: bool = False) -> list[np.ndarray]:
+    """Fully sequential rounds (the unordered baseline)."""
+    out = [np.array([i]) for i in range(n)]
+    if reverse:
+        out = out[::-1]
+    return out
+
+
+def pack_steps(tri: sp.csr_matrix, diag: np.ndarray,
+               rounds: list[np.ndarray],
+               drop_mask: np.ndarray | None = None) -> StepTables:
+    """Pack a strictly-triangular matrix + diagonal into per-round tables.
+
+    ``tri`` must be the strictly lower (forward) or strictly upper (backward)
+    part in the target order; ``rounds`` the execution-ordered row sets
+    (mutually independent within a round).  ``drop_mask`` (bool per row) drops
+    rows (e.g. dummy padding) from the rounds.
+    """
+    tri = sp.csr_matrix(tri)
+    tri.sort_indices()
+    n = tri.shape[0]
+    n_slots = n + 1
+    if drop_mask is not None:
+        rounds = [r[~drop_mask[r]] for r in rounds]
+        rounds = [r for r in rounds if len(r)]
+    S = len(rounds)
+    R = max(len(r) for r in rounds)
+    K = int(np.diff(tri.indptr).max(initial=0))
+    K = max(K, 1)
+    rows = np.full((S, R), n_slots - 1, dtype=np.int32)
+    cols = np.full((S, R, K), n_slots - 1, dtype=np.int32)
+    vals = np.zeros((S, R, K), dtype=np.float64)
+    dinv = np.zeros((S, R), dtype=np.float64)
+    live = np.zeros(S, dtype=np.int32)
+    for s, rset in enumerate(rounds):
+        live[s] = len(rset)
+        rows[s, :len(rset)] = rset
+        dinv[s, :len(rset)] = 1.0 / diag[rset]
+        for t, r in enumerate(rset):
+            lo, hi = tri.indptr[r], tri.indptr[r + 1]
+            cols[s, t, :hi - lo] = tri.indices[lo:hi]
+            vals[s, t, :hi - lo] = tri.data[lo:hi]
+    return StepTables(rows=rows, cols=cols, vals=vals, dinv=dinv,
+                      n_slots=n_slots, live=live)
+
+
+def pack_factor(l_final: sp.csr_matrix, fwd_rounds: list[np.ndarray],
+                bwd_rounds: list[np.ndarray],
+                drop_mask: np.ndarray | None = None
+                ) -> tuple[StepTables, StepTables]:
+    """Pack L (lower, incl. diagonal, target order) into forward and backward
+    substitution tables (backward uses L^T, reverse round order)."""
+    l_final = sp.csr_matrix(l_final)
+    diag = l_final.diagonal()
+    strict_lower = sp.tril(l_final, k=-1, format="csr")
+    strict_upper = sp.csr_matrix(strict_lower.T)
+    fwd = pack_steps(strict_lower, diag, fwd_rounds, drop_mask)
+    bwd = pack_steps(strict_upper, diag, bwd_rounds, drop_mask)
+    return fwd, bwd
+
+
+def pack_factor_hbmc(l_final: sp.csr_matrix, ordering: HBMCOrdering
+                     ) -> tuple[StepTables, StepTables]:
+    return pack_factor(l_final,
+                       rounds_hbmc(ordering, reverse=False),
+                       rounds_hbmc(ordering, reverse=True),
+                       drop_mask=ordering.is_dummy)
+
+
+# ----------------------------------------------------------------------
+# SELL-w packing of a full matrix for SpMV (paper's "sell_spmv" variant).
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SellMatrix:
+    """SELL-C-sigma with C = w, sigma = 1 (HBMC order is already the sort)."""
+    cols: np.ndarray      # (n_slices, max_k, w) int32
+    vals: np.ndarray      # (n_slices, max_k, w) f64
+    slice_k: np.ndarray   # (n_slices,) live k per slice
+    n: int
+    w: int
+    padded_nnz: int
+    nnz: int
+
+
+def pack_sell(a: sp.spmatrix, w: int) -> SellMatrix:
+    a = sp.csr_matrix(a)
+    a.sort_indices()
+    n = a.shape[0]
+    n_pad = ((n + w - 1) // w) * w
+    nnz_per_row = np.zeros(n_pad, dtype=np.int64)
+    nnz_per_row[:n] = np.diff(a.indptr)
+    n_slices = n_pad // w
+    slice_k = nnz_per_row.reshape(n_slices, w).max(axis=1)
+    max_k = int(max(slice_k.max(initial=0), 1))
+    cols = np.zeros((n_slices, max_k, w), dtype=np.int32)
+    vals = np.zeros((n_slices, max_k, w), dtype=np.float64)
+    for r in range(n):
+        s, lane = divmod(r, w)
+        lo, hi = a.indptr[r], a.indptr[r + 1]
+        cols[s, :hi - lo, lane] = a.indices[lo:hi]
+        vals[s, :hi - lo, lane] = a.data[lo:hi]
+    return SellMatrix(cols=cols, vals=vals,
+                      slice_k=slice_k.astype(np.int32), n=n, w=w,
+                      padded_nnz=int(np.sum(slice_k) * w), nnz=a.nnz)
+
+
+def pack_ell(a: sp.spmatrix) -> tuple[np.ndarray, np.ndarray]:
+    """Row-major ELL (the CRS-like gather path for SpMV): (cols, vals)."""
+    a = sp.csr_matrix(a)
+    a.sort_indices()
+    n = a.shape[0]
+    k = int(np.diff(a.indptr).max(initial=0))
+    k = max(k, 1)
+    cols = np.zeros((n, k), dtype=np.int32)
+    vals = np.zeros((n, k), dtype=np.float64)
+    for r in range(n):
+        lo, hi = a.indptr[r], a.indptr[r + 1]
+        cols[r, :hi - lo] = a.indices[lo:hi]
+        vals[r, :hi - lo] = a.data[lo:hi]
+    return cols, vals

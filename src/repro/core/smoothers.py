@@ -1,0 +1,75 @@
+"""Parallel Gauss-Seidel / SOR smoothers on the HBMC round machinery.
+
+The paper's scope (§2) includes the GS smoother and SOR alongside IC(0):
+the sweep x_i <- (1-w) x_i + w (b_i - sum_{j != i} a_ij x_j) / a_ii is the
+same dependence structure as the forward substitution, so the identical
+round tables apply — pack the FULL off-diagonal part of A in the ordering's
+rounds and run the in-place substitution.  Equivalence of orderings for GS
+(eq. 3.4) then holds by the same ER argument; tested in
+tests/test_smoothers.py (BMC sweep == HBMC sweep exactly).
+
+This is the building block HPCG-style multigrid smoothers use (paper §1).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+from .sell import pack_steps
+from .trisolve import DeviceTables, _substitute
+
+
+@dataclasses.dataclass(frozen=True)
+class GSSmoother:
+    fwd: DeviceTables       # full off-diagonal rows, forward round order
+    bwd: DeviceTables       # same rows, reverse round order (symmetric GS)
+    n: int
+    omega: float = 1.0      # SOR relaxation
+
+    def sweep(self, b: jax.Array, x: jax.Array, *, reverse: bool = False
+              ) -> jax.Array:
+        t = self.bwd if reverse else self.fwd
+        x_new = _substitute(t, b, x0=x)
+        if self.omega != 1.0:
+            x_new = (1 - self.omega) * x + self.omega * x_new
+        return x_new
+
+    def symmetric_sweep(self, b: jax.Array, x: jax.Array) -> jax.Array:
+        return self.sweep(b, self.sweep(b, x), reverse=True)
+
+
+def build_gs_smoother(a_bar: sp.spmatrix, fwd_rounds, bwd_rounds,
+                      drop_mask=None, omega: float = 1.0,
+                      dtype=jnp.float64) -> GSSmoother:
+    """a_bar: reordered (padded) matrix; rounds from sell.rounds_*."""
+    a_bar = sp.csr_matrix(a_bar)
+    n = a_bar.shape[0]
+    diag = a_bar.diagonal()
+    off = a_bar - sp.diags(diag)
+    off = sp.csr_matrix(off)
+    off.eliminate_zeros()
+    fwd = pack_steps(off, diag, fwd_rounds, drop_mask)
+    bwd = pack_steps(off, diag, bwd_rounds, drop_mask)
+    return GSSmoother(fwd=DeviceTables.from_host(fwd, dtype=dtype),
+                      bwd=DeviceTables.from_host(bwd, dtype=dtype),
+                      n=n, omega=omega)
+
+
+def gs_solve(smoother: GSSmoother, b: np.ndarray, *, sweeps: int = 100,
+             rtol: float = 1e-8, a_bar: sp.spmatrix | None = None):
+    """Stationary GS/SOR iteration (host loop; returns history)."""
+    x = jnp.zeros_like(jnp.asarray(b))
+    bd = jnp.asarray(b)
+    hist = []
+    for _ in range(sweeps):
+        x = smoother.sweep(bd, x)
+        if a_bar is not None:
+            r = np.linalg.norm(b - a_bar @ np.asarray(x)) / np.linalg.norm(b)
+            hist.append(r)
+            if r < rtol:
+                break
+    return np.asarray(x), hist

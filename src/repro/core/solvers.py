@@ -1,0 +1,130 @@
+"""End-to-end parallel ICCG solvers: MC / BMC / HBMC (paper §5 solvers).
+
+``solve_iccg(a, b, method=...)`` performs the full pipeline:
+ordering -> permuted (padded) system -> shifted IC(0) -> step packing ->
+device PCG -> solution mapped back to the original order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+from . import sell
+from .coloring import block_multicolor_ordering, multicolor_ordering, pad_system
+from .graph import invert_perm, permute_system
+from .hbmc import hbmc_from_bmc, pad_system_hbmc
+from .ic0 import ic0
+from .iccg import PCGResult, pcg, spmv_ell, spmv_sell
+from .trisolve import build_preconditioner_from_rounds
+
+
+@dataclasses.dataclass
+class ICCGReport:
+    method: str
+    result: PCGResult
+    n: int
+    n_padded: int
+    n_colors: int
+    n_rounds: int           # sequential rounds per triangular solve
+    setup_seconds: float
+    solve_seconds: float
+    lane_occupancy: float   # mean live lanes / padded lanes per round
+    x: np.ndarray           # solution in ORIGINAL ordering
+
+
+def _report(method, res, n, npad, ncol, tables, t_setup, t_solve, x):
+    live = tables.live.astype(np.float64)
+    occ = float(np.mean(live / tables.rows.shape[1])) if len(live) else 1.0
+    return ICCGReport(method=method, result=res, n=n, n_padded=npad,
+                      n_colors=ncol, n_rounds=int(tables.rows.shape[0]),
+                      setup_seconds=t_setup, solve_seconds=t_solve,
+                      lane_occupancy=occ, x=x)
+
+
+def solve_iccg(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
+               block_size: int = 32, w: int = 8, shift: float = 0.0,
+               rtol: float = 1e-7, maxiter: int = 10_000,
+               spmv_format: str = "ell", dtype=jnp.float64,
+               record_history: bool = False) -> ICCGReport:
+    a = sp.csr_matrix(a)
+    n = a.shape[0]
+    b = np.asarray(b, dtype=np.float64)
+    t0 = time.perf_counter()
+
+    if method == "mc":
+        mc = multicolor_ordering(a)
+        a_bar, b_bar = permute_system(a, b, mc.perm)
+        perm = mc.perm
+        npad, ncol = n, mc.n_colors
+        fwd_rounds = sell.rounds_mc(mc, reverse=False)
+        bwd_rounds = sell.rounds_mc(mc, reverse=True)
+        drop = None
+    elif method == "bmc":
+        bmc = block_multicolor_ordering(a, block_size)
+        a_bar, b_bar = pad_system(a, b, bmc)
+        perm = bmc.perm
+        npad, ncol = bmc.n_padded, bmc.n_colors
+        fwd_rounds = sell.rounds_bmc(bmc, reverse=False)
+        bwd_rounds = sell.rounds_bmc(bmc, reverse=True)
+        drop = bmc.is_dummy
+    elif method == "hbmc":
+        bmc = block_multicolor_ordering(a, block_size)
+        hb = hbmc_from_bmc(bmc, w)
+        a_bar, b_bar = pad_system_hbmc(a, b, hb)
+        perm = hb.perm
+        npad, ncol = hb.n_final, hb.n_colors
+        fwd_rounds = sell.rounds_hbmc(hb, reverse=False)
+        bwd_rounds = sell.rounds_hbmc(hb, reverse=True)
+        drop = hb.is_dummy
+    elif method == "natural":
+        a_bar, b_bar = a, b
+        perm = np.arange(n)
+        npad, ncol = n, n
+        fwd_rounds = sell.rounds_natural(n, reverse=False)
+        bwd_rounds = sell.rounds_natural(n, reverse=True)
+        drop = None
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    l_bar = ic0(a_bar, shift=shift)
+    precond = build_preconditioner_from_rounds(
+        l_bar, fwd_rounds, bwd_rounds, drop_mask=drop, dtype=dtype)
+
+    if spmv_format == "sell":
+        sm = sell.pack_sell(a_bar, w)
+        vals = jnp.asarray(sm.vals, dtype=dtype)
+        cols = jnp.asarray(sm.cols)
+        spmv = lambda x: spmv_sell(vals, cols, x, sm.n)
+    else:
+        cols_h, vals_h = sell.pack_ell(a_bar)
+        vals = jnp.asarray(vals_h, dtype=dtype)
+        cols = jnp.asarray(cols_h)
+        spmv = lambda x: spmv_ell(vals, cols, x)
+
+    b_dev = jnp.asarray(b_bar, dtype=dtype)
+    t1 = time.perf_counter()
+    res = pcg(spmv, precond, b_dev, rtol=rtol, maxiter=maxiter,
+              record_history=record_history)
+    t2 = time.perf_counter()
+
+    x = np.zeros(n, dtype=np.float64)
+    x[:] = res.x[perm]  # res.x is in new order; x_orig[i] = x_bar[perm[i]]
+    return _report(method, res, n, npad, ncol, precond.fwd_host_live
+                   if hasattr(precond, "fwd_host_live") else _LiveShim(
+                       fwd_rounds, drop),
+                   t1 - t0, t2 - t1, x)
+
+
+class _LiveShim:
+    """Adapter exposing .live and .rows like StepTables for reporting."""
+    def __init__(self, rounds, drop):
+        if drop is not None:
+            rounds = [r[~drop[r]] for r in rounds]
+            rounds = [r for r in rounds if len(r)]
+        self.live = np.array([len(r) for r in rounds], dtype=np.int32)
+        rmax = int(self.live.max(initial=1))
+        self.rows = np.zeros((len(rounds), rmax), dtype=np.int32)

@@ -1,0 +1,134 @@
+"""Vectorized forward/backward substitution over HBMC step tables (§4.3).
+
+The solve is ``S = n_c * b_s`` sequential rounds; each round is a dense,
+fully-parallel gather / fused-multiply-subtract / scale over all live lanes
+(every level-1 block of the color x w lanes).  On TPU the per-round work is
+pure VPU element-wise + gather; rounds are a ``lax.fori_loop`` so the HLO is
+O(1) in problem size.
+
+Two device paths:
+  * ``forward_solve`` / ``backward_solve`` — pure jnp (XLA), the production
+    fallback and the oracle for the Pallas kernel.
+  * ``repro.kernels.hbmc_trisolve`` — Pallas kernel with explicit VMEM
+    blocking (see kernels/), validated against this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+from .hbmc import HBMCOrdering
+from .sell import StepTables, pack_factor_hbmc
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeviceTables:
+    """StepTables moved to device as a pytree."""
+    rows: jax.Array   # (S, R) int32
+    cols: jax.Array   # (S, R, K) int32
+    vals: jax.Array   # (S, R, K)
+    dinv: jax.Array   # (S, R)
+    n_slots: int
+
+    def tree_flatten(self):
+        return (self.rows, self.cols, self.vals, self.dinv), (self.n_slots,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, n_slots=aux[0])
+
+    @classmethod
+    def from_host(cls, t: StepTables, dtype=jnp.float64) -> "DeviceTables":
+        return cls(rows=jnp.asarray(t.rows), cols=jnp.asarray(t.cols),
+                   vals=jnp.asarray(t.vals, dtype=dtype),
+                   dinv=jnp.asarray(t.dinv, dtype=dtype), n_slots=t.n_slots)
+
+
+def _substitute(tables: DeviceTables, q: jax.Array,
+                x0: jax.Array | None = None) -> jax.Array:
+    """Run all rounds of one triangular solve.  q has length n_slots-1.
+
+    With ``x0`` the vector starts from an existing iterate and the rounds
+    overwrite it in place — this is a Gauss-Seidel sweep when the tables
+    hold the FULL off-diagonal part of A (see gauss_seidel_sweep)."""
+    n_slots = tables.n_slots
+    if x0 is None:
+        y0 = jnp.zeros((n_slots,), dtype=q.dtype)
+    else:
+        y0 = jnp.concatenate([x0, jnp.zeros((1,), dtype=q.dtype)])
+    qp = jnp.concatenate([q, jnp.zeros((1,), dtype=q.dtype)])
+    S = tables.rows.shape[0]
+
+    def body(s, y):
+        rows = tables.rows[s]                       # (R,)
+        gathered = y[tables.cols[s]]                # (R, K)
+        acc = jnp.einsum("rk,rk->r", tables.vals[s], gathered)
+        t = (qp[rows] - acc) * tables.dinv[s]
+        return y.at[rows].set(t)
+
+    y = jax.lax.fori_loop(0, S, body, y0)
+    return y[:-1]
+
+
+@jax.jit
+def forward_solve(tables: DeviceTables, q: jax.Array) -> jax.Array:
+    """y = L^{-1} q over the packed forward tables (eq. 4.12-4.18)."""
+    return _substitute(tables, q)
+
+
+@jax.jit
+def backward_solve(tables: DeviceTables, y: jax.Array) -> jax.Array:
+    """z = L^{-T} y over the packed backward tables."""
+    return _substitute(tables, y)
+
+
+@dataclasses.dataclass(frozen=True)
+class HBMCPreconditioner:
+    """IC(0) preconditioner  M^{-1} r = (L L^T)^{-1} r  in HBMC order."""
+    fwd: DeviceTables
+    bwd: DeviceTables
+    n_final: int
+
+    def __call__(self, r: jax.Array) -> jax.Array:
+        y = forward_solve(self.fwd, r)
+        return backward_solve(self.bwd, y)
+
+
+def build_preconditioner(l_final: sp.csr_matrix, ordering: HBMCOrdering,
+                         dtype=jnp.float64) -> HBMCPreconditioner:
+    fwd_h, bwd_h = pack_factor_hbmc(l_final, ordering)
+    return HBMCPreconditioner(
+        fwd=DeviceTables.from_host(fwd_h, dtype=dtype),
+        bwd=DeviceTables.from_host(bwd_h, dtype=dtype),
+        n_final=ordering.n_final)
+
+
+def build_preconditioner_from_rounds(
+        l_final: sp.csr_matrix, fwd_rounds, bwd_rounds,
+        drop_mask=None, dtype=jnp.float64) -> HBMCPreconditioner:
+    """Generic variant: MC / BMC / natural solvers share the machinery."""
+    from .sell import pack_factor
+    fwd_h, bwd_h = pack_factor(l_final, fwd_rounds, bwd_rounds, drop_mask)
+    return HBMCPreconditioner(
+        fwd=DeviceTables.from_host(fwd_h, dtype=dtype),
+        bwd=DeviceTables.from_host(bwd_h, dtype=dtype),
+        n_final=l_final.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# Sequential oracle (host) — used by tests to pin down exact semantics.
+# ---------------------------------------------------------------------------
+
+def sequential_forward(l: sp.csr_matrix, q: np.ndarray) -> np.ndarray:
+    return sp.linalg.spsolve_triangular(sp.csr_matrix(l), q, lower=True)
+
+
+def sequential_backward(l: sp.csr_matrix, y: np.ndarray) -> np.ndarray:
+    return sp.linalg.spsolve_triangular(sp.csr_matrix(l).T.tocsr(), y,
+                                        lower=False)

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+hbmc_trisolve — the HBMC forward/backward substitution (the paper's core
+kernel, Fig 4.6 TPU adaptation): round-major layout, sequential grid over
+rounds, VMEM-resident solution vector, VPU gathers, contiguous stores.
+
+sell_spmv — SELL-w sparse matrix-vector product (paper §4.4.2).
+
+Both ship ops.py jit wrappers and ref.py pure-jnp oracles, and are
+validated in interpret mode across (shape, b_s, w, dtype) sweeps
+(tests/test_trisolve.py).
+"""
+from .hbmc_trisolve import hbmc_trisolve
+from .sell_spmv import sell_spmv
+from .ops import RoundMajorTables, build_kernel_preconditioner
+from .ref import hbmc_trisolve_ref, sell_spmv_ref

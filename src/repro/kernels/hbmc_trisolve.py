@@ -1,0 +1,85 @@
+"""Pallas TPU kernel for the HBMC triangular substitution.
+
+TPU adaptation of the paper's AVX-512 inner loop (Fig. 4.6).  The rounds of
+the HBMC substitution are laid out *round-major*: the R lanes of round ``s``
+occupy the contiguous slice ``y[s*R : (s+1)*R]``.  Laying the vector out in
+execution order turns the paper's per-block strided stores into dense
+contiguous VMEM stores; the ``_mm512_i32logather_pd`` gather maps to a VPU
+gather from the VMEM-resident solution vector.  Round-major layout is itself
+an equivalent reordering (same argument as HBMC <- BMC: lanes of one round
+are mutually independent), so convergence is untouched.
+
+Grid: one (sequential) grid step per round — TPU grid steps execute in
+order, which realizes the round -> round dependency without extra
+synchronization, mirroring "one thread barrier per color" in the paper.
+
+Memory plan per grid step (VMEM):
+  cols  (1, R, K) int32   - blocked over rounds via BlockSpec
+  vals  (1, R, K) dtype   - blocked over rounds
+  dinv  (1, R)    dtype   - blocked over rounds
+  q     (1, R)    dtype   - blocked over rounds (round-major RHS)
+  y     (S*R_pad,) dtype  - full vector, input/output aliased accumulator
+
+The working set of one grid step is R*K*(4+dtype) + O(R) bytes; with the
+production tile R = 2048 lanes, K <= 32, f32 that is ~0.5 MiB, far below
+VMEM, leaving the full y vector resident for gathers (y of 8M lanes f32 =
+32 MiB; larger problems shard rounds across devices first — see
+core/partition.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _trisolve_kernel(cols_ref, vals_ref, dinv_ref, q_ref, y_in_ref, y_ref):
+    s = pl.program_id(0)
+    r = cols_ref.shape[1]
+    cols = cols_ref[0]            # (R, K) int32, round-major coords
+    vals = vals_ref[0]            # (R, K)
+    dinv = dinv_ref[0]            # (R,)
+    q = q_ref[0]                  # (R,)
+    y = y_ref[...]                # full (S*R (+pad),) vector, aliased in/out
+    gathered = jnp.take(y, cols, axis=0, fill_value=0)   # (R, K) VPU gather
+    acc = jnp.sum(vals * gathered, axis=-1)              # (R,)
+    t = (q - acc) * dinv
+    y_ref[pl.ds(s * r, r)] = t            # dense contiguous store
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hbmc_trisolve(cols: jax.Array, vals: jax.Array, dinv: jax.Array,
+                  q: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Solve the round-major packed triangular system.
+
+    Args:
+      cols: (S, R, K) int32 — column indices in round-major coordinates;
+        padding must point at a slot whose matching ``vals`` entry is 0.
+      vals: (S, R, K) — off-diagonal values (0 on padding).
+      dinv: (S, R) — inverse diagonal (0 on padding lanes).
+      q:    (S, R) — right-hand side in round-major layout.
+
+    Returns:
+      y: (S*R,) solution in round-major layout.
+    """
+    s_, r_, k_ = cols.shape
+    dtype = vals.dtype
+    y0 = jnp.zeros((s_ * r_,), dtype=dtype)
+    grid = (s_,)
+    return pl.pallas_call(
+        _trisolve_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, r_, k_), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, r_, k_), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, r_), lambda s: (s, 0)),
+            pl.BlockSpec((1, r_), lambda s: (s, 0)),
+            pl.BlockSpec((s_ * r_,), lambda s: (0,)),   # y (aliased input)
+        ],
+        out_specs=pl.BlockSpec((s_ * r_,), lambda s: (0,)),
+        out_shape=jax.ShapeDtypeStruct((s_ * r_,), dtype),
+        input_output_aliases={4: 0},
+        interpret=interpret,
+    )(cols, vals, dinv, q, y0)

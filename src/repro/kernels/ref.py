@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-exact semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hbmc_trisolve_ref(cols: jax.Array, vals: jax.Array, dinv: jax.Array,
+                      q: jax.Array) -> jax.Array:
+    """Round-major triangular solve, fori_loop + dynamic_update_slice."""
+    s_, r_, k_ = cols.shape
+    y0 = jnp.zeros((s_ * r_,), dtype=vals.dtype)
+
+    def body(s, y):
+        g = jnp.take(y, cols[s], axis=0, fill_value=0)     # (R, K)
+        acc = jnp.sum(vals[s] * g, axis=-1)
+        t = (q[s] - acc) * dinv[s]
+        return jax.lax.dynamic_update_slice(y, t, (s * r_,))
+
+    return jax.lax.fori_loop(0, s_, body, y0)
+
+
+def sell_spmv_ref(vals: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
+    """SELL-w SpMV oracle.  vals/cols: (n_slices, K, w); x: (n,)."""
+    g = jnp.take(x, cols, axis=0, fill_value=0)            # (S, K, w)
+    return jnp.einsum("skw,skw->sw", vals, g).reshape(-1)

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel for SELL-w sparse matrix-vector multiplication (§4.4.2).
+
+SELL-C-sigma with C = w: each slice holds w rows column-major so one VPU
+load covers one (k, lane) plane.  The kernel tiles slices over the grid;
+x stays VMEM-resident for gathers (same residency argument as the trisolve
+kernel).  Slices are zero-padded to the slice-max row length, matching the
+paper's SELL cost model (the Audikw_1 40%-padding discussion in §5.2.2 is
+reproduced by ``benchmarks/trisolve_bench.py`` via the padded_nnz counter).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sell_spmv_kernel(vals_ref, cols_ref, x_ref, y_ref):
+    vals = vals_ref[...]          # (T, K, w) tile of slices
+    cols = cols_ref[...]          # (T, K, w)
+    x = x_ref[...]                # (n_pad,)
+    g = jnp.take(x, cols, axis=0, fill_value=0)
+    y_ref[...] = jnp.einsum("skw,skw->sw", vals, g)
+
+
+@functools.partial(jax.jit, static_argnames=("slice_tile", "interpret"))
+def sell_spmv(vals: jax.Array, cols: jax.Array, x: jax.Array,
+              *, slice_tile: int = 256, interpret: bool = True) -> jax.Array:
+    """y = A x with A in SELL-w layout.
+
+    Args:
+      vals: (n_slices, K, w) slice-packed values (0 padding).
+      cols: (n_slices, K, w) int32 column indices (padding -> any index whose
+        vals entry is 0; fill_value guards out-of-range).
+      x:    (n_pad,) input vector (padded to n_slices*w).
+      slice_tile: slices per grid step (VMEM tile height).
+
+    Returns:
+      y: (n_slices * w,) in slice-row-major order.
+    """
+    n_slices, k_, w_ = vals.shape
+    t = min(slice_tile, n_slices)
+    # pad slice count to a multiple of the tile
+    pad = (-n_slices) % t
+    if pad:
+        vals = jnp.pad(vals, ((0, pad), (0, 0), (0, 0)))
+        cols = jnp.pad(cols, ((0, pad), (0, 0), (0, 0)))
+    ns = vals.shape[0]
+    grid = (ns // t,)
+    y = pl.pallas_call(
+        _sell_spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, k_, w_), lambda i: (i, 0, 0)),
+            pl.BlockSpec((t, k_, w_), lambda i: (i, 0, 0)),
+            pl.BlockSpec((x.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((t, w_), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ns, w_), vals.dtype),
+        interpret=interpret,
+    )(vals, cols, x)
+    return y.reshape(-1)[:n_slices * w_]

@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, print memory/cost analyses, extract roofline terms.
+
+The two lines above MUST stay the very first statements of this module —
+jax locks the device count on first initialization.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, cells, get_config
+from repro.launch import input_specs as ispec
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import roofline_terms
+from repro.models.config import ArchConfig
+from repro.serve.step import serve_step
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import train_step
+from repro.serve.step import prefill
+
+
+# per-arch training knobs (microbatching for activation pressure)
+MICROBATCHES = {"llama3-405b": 16, "qwen2-vl-72b": 8, "mixtral-8x22b": 4, "qwen3-14b": 4}
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh, *,
+               param_dtype=jnp.bfloat16):
+    cfg = get_config(arch_id)
+    spec = SHAPES[shape_name]
+    chips = mesh.devices.size
+    params_abs = ispec.abstract_params(cfg, mesh, dtype=param_dtype)
+
+    if spec.kind == "train":
+        opt_abs = ispec.abstract_opt_state(params_abs, mesh)
+        batch_abs = ispec.train_batch_specs(cfg, mesh, spec.global_batch,
+                                            spec.seq_len)
+        opt_cfg = AdamWConfig(
+            mu_dtype=jnp.bfloat16 if arch_id == "llama3-405b"
+            else jnp.float32)
+        mb = MICROBATCHES.get(arch_id, 1)
+        # divisibility guard (EXPERIMENTS P9): every microbatch must still
+        # split over all DP shards or XLA replicates the step
+        dp = chips // dict(zip(mesh.axis_names,
+                               mesh.devices.shape)).get("model", 1)
+        while mb > 1 and (spec.global_batch // mb) % dp:
+            mb //= 2
+        fn = partial(train_step, cfg=cfg, opt_cfg=opt_cfg, microbatches=mb)
+        jitted = jax.jit(fn, donate_argnums=(0, 1))
+        with mesh:
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        mf = cfg.model_flops(spec.global_batch, spec.seq_len)
+    elif spec.kind == "prefill":
+        inputs_abs = ispec.prefill_specs(cfg, mesh, spec.global_batch,
+                                         spec.seq_len)
+        jitted = jax.jit(
+            lambda p, x: prefill(p, cfg, x, max_len=spec.seq_len))
+        with mesh:
+            lowered = jitted.lower(params_abs, inputs_abs)
+        # prefill = forward-only pass: 2*N*D
+        mf = cfg.model_flops(spec.global_batch, spec.seq_len) / 3.0
+    else:  # decode
+        cache_abs, tokens_abs, pos_abs = ispec.decode_specs(
+            cfg, mesh, spec.global_batch, spec.seq_len)
+        fn = partial(serve_step, cfg=cfg)
+        jitted = jax.jit(fn, donate_argnums=(1,))
+        with mesh:
+            lowered = jitted.lower(params_abs, cache_abs, tokens_abs,
+                                   pos_abs)
+        mf = cfg.model_flops(spec.global_batch, spec.seq_len, decode=True)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    terms = roofline_terms(compiled, mf, chips)
+    terms.update(arch=arch_id, shape=shape_name, chips=chips,
+                 mesh_axes=dict(zip(mesh.axis_names, mesh.devices.shape)),
+                 compile_seconds=time.time() - t0,
+                 kind=spec.kind)
+    return compiled, terms
+
+
+def run_cell(arch_id, shape_name, mesh_kind, outdir=None, verbose=True):
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    compiled, terms = lower_cell(arch_id, shape_name, mesh)
+    if verbose:
+        print(f"== {arch_id} x {shape_name} x {mesh_kind} "
+              f"({terms['chips']} chips) ==")
+        ma = compiled.memory_analysis()
+        print(ma)
+        ca = compiled.cost_analysis()
+        keys = ("flops", "bytes accessed")
+        print({k: ca.get(k) for k in keys} if hasattr(ca, "get") else ca)
+        print(json.dumps({k: v for k, v in terms.items()
+                          if k.startswith(("t_", "dominant", "useful"))},
+                         indent=2, default=str))
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        stem = os.path.join(outdir, f"{arch_id}__{shape_name}__{mesh_kind}")
+        with open(stem + ".json", "w") as f:
+            json.dump(terms, f, indent=2, default=str)
+        # compressed optimized HLO: re-derive roofline terms offline
+        # (launch/reanalyze.py) without recompiling
+        import zstandard
+        with open(stem + ".hlo.zst", "wb") as f:
+            f.write(zstandard.ZstdCompressor(level=6).compress(
+                compiled.as_text().encode()))
+    return terms
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = (("single", "multi") if args.mesh == "both" else (args.mesh,))
+    todo = []
+    if args.all:
+        for arch, shape, skip in cells():
+            if skip:
+                print(f"SKIP {arch} x {shape} (quadratic attention at 512k; "
+                      f"see DESIGN.md §7)")
+                continue
+            for mk in meshes:
+                todo.append((arch, shape, mk))
+    else:
+        assert args.arch and args.shape
+        todo = [(args.arch, args.shape, mk) for mk in meshes]
+
+    failures = []
+    for arch, shape, mk in todo:
+        if args.skip_existing and args.out and os.path.exists(
+                os.path.join(args.out, f"{arch}__{shape}__{mk}.json")):
+            print(f"cached {arch} x {shape} x {mk}")
+            continue
+        try:
+            run_cell(arch, shape, mk, outdir=args.out)
+        except Exception as e:      # noqa: BLE001 — report all cell failures
+            traceback.print_exc()
+            failures.append((arch, shape, mk, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"dry-run OK: {len(todo)} cells")
+
+
+if __name__ == "__main__":
+    main()

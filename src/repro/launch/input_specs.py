@@ -1,0 +1,75 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(arch, shape)`` returns the abstract arguments of the step
+function that the dry-run lowers, with NamedShardings attached.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.dist.sharding import (batch_partition_spec, cache_partition_spec,
+                                 params_shardings)
+from repro.models import init_cache, param_specs
+from repro.models.config import ArchConfig
+from repro.train.optimizer import init_opt_state
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def with_shardings(tree, shardings):
+    return jax.tree.map(
+        lambda x, s: _sds(x.shape, x.dtype, s), tree, shardings)
+
+
+def abstract_params(cfg: ArchConfig, mesh, dtype=jnp.bfloat16):
+    specs = param_specs(cfg, dtype=dtype)
+    return with_shardings(specs, params_shardings(specs, mesh))
+
+
+def abstract_opt_state(params_abs, mesh):
+    specs = jax.eval_shape(init_opt_state, params_abs)
+    return with_shardings(specs, params_shardings(specs, mesh))
+
+
+def train_batch_specs(cfg: ArchConfig, mesh, batch: int, seq: int):
+    bspec2 = NamedSharding(mesh, batch_partition_spec(mesh, batch, ndim=2))
+    if cfg.takes_embeddings:
+        bspec3 = NamedSharding(mesh,
+                               batch_partition_spec(mesh, batch, ndim=3))
+        inputs = _sds((batch, seq, cfg.d_model), jnp.bfloat16, bspec3)
+    else:
+        inputs = _sds((batch, seq), jnp.int32, bspec2)
+    labels = _sds((batch, seq), jnp.int32, bspec2)
+    return {"inputs": inputs, "labels": labels}
+
+
+def decode_specs(cfg: ArchConfig, mesh, batch: int, context: int,
+                 cache_dtype=jnp.bfloat16):
+    cache_shape = jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len=context, dtype=cache_dtype))
+    cache_shard = jax.tree.map(
+        lambda x: NamedSharding(mesh, cache_partition_spec(mesh, x, batch)),
+        cache_shape)
+    cache = jax.tree.map(
+        lambda x, s: _sds(x.shape, x.dtype, s), cache_shape, cache_shard)
+    bspec = NamedSharding(mesh, batch_partition_spec(mesh, batch, ndim=2))
+    if cfg.takes_embeddings:
+        b3 = NamedSharding(mesh, batch_partition_spec(mesh, batch, ndim=3))
+        tokens = _sds((batch, 1, cfg.d_model), jnp.bfloat16, b3)
+    else:
+        tokens = _sds((batch, 1), jnp.int32, bspec)
+    cur_pos = _sds((), jnp.int32, NamedSharding(mesh, P()))
+    return cache, tokens, cur_pos
+
+
+def prefill_specs(cfg: ArchConfig, mesh, batch: int, seq: int):
+    bspec = NamedSharding(mesh, batch_partition_spec(mesh, batch, ndim=2))
+    if cfg.takes_embeddings:
+        b3 = NamedSharding(mesh, batch_partition_spec(mesh, batch, ndim=3))
+        return _sds((batch, seq, cfg.d_model), jnp.bfloat16, b3)
+    return _sds((batch, seq), jnp.int32, bspec)

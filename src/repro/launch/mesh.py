@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run process forces
+512 host devices while tests/benches must see 1.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod.
+
+    The dry-run process exposes 512 host devices; the single-pod mesh takes
+    the first 256 of them.
+    """
+    import math
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"need {need} devices, found {len(devs)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            f"(launch/dryrun.py sets this automatically)")
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devs[:need]).reshape(shape), axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for CPU smoke tests of the pjit code paths."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware model used by the roofline analysis
+HW = dict(
+    peak_flops=197e12,      # bf16 FLOP/s per chip
+    hbm_bw=819e9,           # bytes/s per chip
+    ici_bw=5.0e10,          # bytes/s per link (~50 GB/s)
+    hbm_bytes=16 * 2**30,   # 16 GiB per chip
+)

@@ -1,0 +1,58 @@
+"""Re-derive roofline terms from stored .hlo.zst artifacts — lets the HBM/
+collective cost model evolve without recompiling 66 cells.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze results/dryrun
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import zstandard
+
+from .hlo_analysis import analyze_hlo
+from .mesh import HW
+
+
+def reanalyze_cell(stem: str) -> dict:
+    with open(stem + ".json") as f:
+        terms = json.load(f)
+    with open(stem + ".hlo.zst", "rb") as f:
+        hlo = zstandard.ZstdDecompressor().decompress(f.read()).decode()
+    a = analyze_hlo(hlo)
+    t_compute = a["flops"] / HW["peak_flops"]
+    t_memory = a["bytes"] / HW["hbm_bw"]
+    t_coll = a["collective_wire_bytes"] / HW["ici_bw"]
+    bound = max(t_compute, t_memory, t_coll)
+    mf = terms["model_flops_per_device"]
+    terms.update(
+        flops_per_device=a["flops"], bytes_per_device=a["bytes"],
+        collective_bytes_per_device=a["collective_wire_bytes"],
+        collective_counts=a["collective_counts"],
+        collective_bytes_by_kind=a["collective_bytes_by_kind"],
+        t_compute_s=t_compute, t_memory_s=t_memory, t_collective_s=t_coll,
+        dominant=max(("compute", t_compute), ("memory", t_memory),
+                     ("collective", t_coll), key=lambda t: t[1])[0],
+        useful_flops_ratio=(mf / a["flops"]) if a["flops"] else 0.0,
+        roofline_bound_s=bound,
+        roofline_fraction=(mf / HW["peak_flops"]) / bound if bound else 0.0,
+    )
+    with open(stem + ".json", "w") as f:
+        json.dump(terms, f, indent=2, default=str)
+    return terms
+
+
+def main(dirpath: str):
+    stems = sorted(set(
+        os.path.join(dirpath, fn[:-len(".hlo.zst")])
+        for fn in os.listdir(dirpath) if fn.endswith(".hlo.zst")))
+    for s in stems:
+        t = reanalyze_cell(s)
+        print(f"{os.path.basename(s):55s} {t['dominant']:10s} "
+              f"bound={t['roofline_bound_s']:.4g}s "
+              f"roofline={100*t['roofline_fraction']:.2f}%")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")

@@ -1,0 +1,3 @@
+"""Model zoo: the 10 assigned architectures as one configurable decoder stack."""
+from .config import ArchConfig
+from .transformer import forward, init_cache, init_params, param_specs

@@ -1,0 +1,156 @@
+"""Flash attention with a custom VJP (chunk-recomputing backward).
+
+Default JAX AD through the online-softmax kv-scan stacks per-chunk
+residuals — S^2-sized HBM traffic that dominated the llama3-405b train
+cell (34% of all bytes; see EXPERIMENTS §Perf P6).  The flash backward
+recomputes p = exp(qk - lse) per (q-chunk, kv-chunk) tile instead, exactly
+like the Pallas/TPU production kernels:
+
+  forward residuals: q, k, v, o, lse            (all O(S), no S^2 term)
+  backward:  D = rowsum(do * o)
+             per tile: p   = exp(s - lse)
+                       dv += p^T do
+                       dp  = do v^T
+                       ds  = p * (dp - D) * scale
+                       dq += ds k ;  dk += ds^T q
+
+Shapes follow layers.flash_attention: q (B,Sq,KV,G,hd), k/v (B,Skv,KV,hd),
+already padded to whole chunks; positions carry the causal/window mask.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, window):
+    m = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    return m
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def flash_core(q, k, v, q_positions, kv_positions, window, q_chunk,
+               kv_chunk):
+    o, _ = _flash_fwd_impl(q, k, v, q_positions, kv_positions, window,
+                           q_chunk, kv_chunk)
+    return o
+
+
+def _flash_fwd_impl(q, k, v, qpos, kpos, window, q_chunk, kv_chunk):
+    b, sq, kv, g, hd = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    qs = jnp.moveaxis(q.reshape(b, nq, q_chunk, kv, g, hd), 1, 0)
+    qp = qpos.reshape(nq, q_chunk)
+    ks = jnp.moveaxis(k.reshape(b, nk, kv_chunk, kv, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, nk, kv_chunk, kv, hd), 1, 0)
+    kp = kpos.reshape(nk, kv_chunk)
+
+    def per_q(carry, xs):
+        qc, qpc = xs
+
+        def inner(acc, ys):
+            kc, vc, kpc = ys
+            m0, l0, o0 = acc
+            s = jnp.einsum("btkgh,bukh->bkgtu", qc, kc) * scale
+            s = jnp.where(_mask(qpc, kpc, window)[None, None, None],
+                          s.astype(jnp.float32), NEG_INF)
+            m = jnp.maximum(m0, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m[..., None])
+            a0 = jnp.exp(m0 - m)
+            l = l0 * a0 + jnp.sum(p, axis=-1)
+            o = o0 * a0[..., None] \
+                + jnp.einsum("bkgtu,bukh->bkgth", p, vc.astype(jnp.float32))
+            return (m, l, o), None
+
+        acc0 = (jnp.full((b, kv, g, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((b, kv, g, q_chunk), jnp.float32),
+                jnp.zeros((b, kv, g, q_chunk, hd), jnp.float32))
+        (m, l, o), _ = jax.lax.scan(inner, acc0, (ks, vs, kp))
+        l = jnp.maximum(l, 1e-30)
+        out = (o / l[..., None]).astype(q.dtype)      # (B,KV,G,Tq,hd)
+        lse = m + jnp.log(l)                          # (B,KV,G,Tq)
+        return carry, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(per_q, None, (qs, qp))
+    # outs: (nq, B, KV, G, Tq, hd) -> (B, Sq, KV, G, hd)
+    o = jnp.moveaxis(outs, 0, 1).transpose(0, 1, 4, 2, 3, 5) \
+        .reshape(b, sq, kv, g, hd)
+    # lses: (nq, B, KV, G, Tq) -> (B, Sq, KV, G)
+    lse = jnp.moveaxis(lses, 0, 1).transpose(0, 1, 4, 2, 3) \
+        .reshape(b, sq, kv, g)
+    return o, lse
+
+
+def _fwd(q, k, v, qpos, kpos, window, q_chunk, kv_chunk):
+    o, lse = _flash_fwd_impl(q, k, v, qpos, kpos, window, q_chunk, kv_chunk)
+    return o, (q, k, v, qpos, kpos, o, lse)
+
+
+def _bwd(window, q_chunk, kv_chunk, res, do):
+    q, k, v, qpos, kpos, o, lse = res
+    b, sq, kv, g, hd = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    nq, nk = sq // q_chunk, skv // kv_chunk
+
+    # D = rowsum(do * o): (B,Sq,KV,G)
+    d_ = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    qs = jnp.moveaxis(q.reshape(b, nq, q_chunk, kv, g, hd), 1, 0)
+    dos = jnp.moveaxis(do.reshape(b, nq, q_chunk, kv, g, hd), 1, 0)
+    ds_ = jnp.moveaxis(d_.reshape(b, nq, q_chunk, kv, g), 1, 0)
+    lses = jnp.moveaxis(lse.reshape(b, nq, q_chunk, kv, g), 1, 0)
+    qp = qpos.reshape(nq, q_chunk)
+    ks = jnp.moveaxis(k.reshape(b, nk, kv_chunk, kv, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, nk, kv_chunk, kv, hd), 1, 0)
+    kp = kpos.reshape(nk, kv_chunk)
+
+    def per_q(carry, xs):
+        dk_acc, dv_acc = carry                        # (nk,B,Tk,KV,hd) f32
+        qc, doc, dc, lsec, qpc = xs
+
+        def inner(dq, ys):
+            kc, vc, kpc = ys
+            s = jnp.einsum("btkgh,bukh->bkgtu", qc, kc) * scale
+            msk = _mask(qpc, kpc, window)[None, None, None]
+            s = jnp.where(msk, s.astype(jnp.float32), NEG_INF)
+            # lsec: (B,Tq,KV,G) -> (B,KV,G,Tq)
+            lse_t = lsec.transpose(0, 2, 3, 1)
+            p = jnp.exp(s - lse_t[..., None])         # (B,KV,G,Tq,Tk)
+            do_t = doc.transpose(0, 2, 3, 1, 4)       # (B,KV,G,Tq,hd)
+            dv_c = jnp.einsum("bkgtu,bkgth->bukh", p,
+                              do_t.astype(jnp.float32))
+            dp = jnp.einsum("bkgth,bukh->bkgtu", do_t.astype(jnp.float32),
+                            vc.astype(jnp.float32))
+            d_t = dc.transpose(0, 2, 3, 1)            # (B,KV,G,Tq)
+            dsx = p * (dp - d_t[..., None]) * scale
+            dq = dq + jnp.einsum("bkgtu,bukh->btkgh", dsx,
+                                 kc.astype(jnp.float32))
+            dk_c = jnp.einsum("bkgtu,btkgh->bukh", dsx,
+                              qc.astype(jnp.float32))
+            return dq, (dk_c, dv_c)
+
+        dq0 = jnp.zeros((b, q_chunk, kv, g, hd), jnp.float32)
+        dq, (dk_cs, dv_cs) = jax.lax.scan(inner, dq0, (ks, vs, kp))
+        return (dk_acc + dk_cs, dv_acc + dv_cs), dq
+
+    dk0 = jnp.zeros((nk, b, kv_chunk, kv, hd), jnp.float32)
+    dv0 = jnp.zeros((nk, b, kv_chunk, kv, hd), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(per_q, (dk0, dv0),
+                                 (qs, dos, ds_, lses, qp))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(b, sq, kv, g, hd).astype(q.dtype)
+    dk = jnp.moveaxis(dk, 0, 1).reshape(b, skv, kv, hd).astype(k.dtype)
+    dv = jnp.moveaxis(dv, 0, 1).reshape(b, skv, kv, hd).astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+flash_core.defvjp(_fwd, _bwd)

@@ -1,0 +1,287 @@
+"""Shared layer library: norms, RoPE/M-RoPE, attention (full/windowed,
+memory-chunked), MLPs.  Pure-functional: params are nested dicts of arrays.
+
+Attention is implemented flash-style in plain JAX: an outer scan over query
+chunks and an inner scan over key/value chunks with an online-softmax
+accumulator, so no (S, S) score tensor is ever materialized — required for
+the 32k prefill shapes and the production remat policy.  Windowed attention
+(SWA / local) slices a *static-size* KV band per query chunk, making total
+FLOPs linear in sequence length (this is what makes ``long_500k`` runnable
+for mixtral/recurrentgemma).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.constraints import BATCH, constrain
+
+# ---------------------------------------------------------------------------
+# initializers / norms
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, p, kind: str, eps: float):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"], eps)
+    return layernorm(x, p["scale"], p["bias"], eps)
+
+
+def norm_params(key, d, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE for Qwen2-VL)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               m_rope_sections: Optional[tuple] = None) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) or (3, B, S) for M-RoPE."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                      # (hd/2,)
+    if positions.ndim == 3:                          # M-RoPE: (3, B, S)
+        assert m_rope_sections is not None
+        # section s of the hd/2 frequency slots takes angles from axis s
+        sec_id = jnp.repeat(
+            jnp.arange(len(m_rope_sections)),
+            jnp.array(m_rope_sections),
+            total_repeat_length=hd // 2)             # (hd/2,)
+        ang_all = positions[..., None].astype(jnp.float32) * inv  # (3,B,S,hd/2)
+        ang = jnp.take_along_axis(
+            jnp.moveaxis(ang_all, 0, -1),            # (B,S,hd/2,3)
+            sec_id[None, None, :, None], axis=-1)[..., 0]
+    else:
+        ang = positions[..., None].astype(jnp.float32) * inv      # (B,S,hd/2)
+    # angles in f32; the rotation itself stays in the activation dtype so
+    # no x-sized f32 tensors cross collective boundaries (measured: XLA
+    # hoists all-gathers past the converts, doubling wire bytes)
+    cos = jnp.cos(ang).astype(x.dtype)[:, :, None, :]   # (B,S,1,hd/2)
+    sin = jnp.sin(ang).astype(x.dtype)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _attend_block(q, k, v, qpos, kpos, window, scale):
+    """One (q-chunk, kv-chunk) online-softmax block.
+
+    q: (B, Tq, KV, G, hd); k/v: (B, Tk, KV, hd).
+    Returns (scores_max, exp_sums, weighted_v) pieces for the accumulator.
+    """
+    s = jnp.einsum("btkgh,bukh->bkgtu", q, k) * scale   # (B,KV,G,Tq,Tk)
+    mask = kpos[None, :] <= qpos[:, None]               # causal
+    if window is not None:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s.astype(jnp.float32), NEG_INF)
+    m = jnp.max(s, axis=-1)                             # (B,KV,G,Tq)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bkgtu,bukh->bkgth", p.astype(v.dtype), v)
+    return m, l, pv
+
+
+def _ctx_parallel_flash(q, k, v, qp, kp, window, scale):
+    """Context-parallel forward: all query chunks advance together through
+    the kv scan, with the *chunk axis* sharded over `model`.  Used for
+    prefill of archs whose head count does not divide the TP axis (qwen3's
+    40, musicgen's 24): head-sharding is impossible, so without this the
+    partitioner replicates the whole attention across `model` (measured
+    8-16x redundant FLOPs, EXPERIMENTS §Perf P10).
+
+    q: (B, nq, Tq, KV, G, hd) pre-chunked; k/v: (nk, B, Tk, KV, hd);
+    qp: (nq, Tq); kp: (nk, Tk).
+    """
+    b, nq, tq, kv, g, hd = q.shape
+    q = constrain(q, BATCH, "model", None, None, None, None)
+
+    def inner(acc, ys):
+        kc, vc, kpc = ys
+        m0, l0, o0 = acc
+        s = jnp.einsum("bqtkgh,bukh->bkgqtu", q, kc) * scale
+        mask = kpc[None, None, :] <= qp[:, :, None]
+        if window is not None:
+            mask = mask & (kpc[None, None, :] > (qp[:, :, None] - window))
+        s = jnp.where(mask[None, None, None], s.astype(jnp.float32),
+                      NEG_INF)
+        m = jnp.maximum(m0, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m[..., None])
+        a0 = jnp.exp(m0 - m)
+        l = l0 * a0 + jnp.sum(p, axis=-1)
+        o = o0 * a0[..., None] + jnp.einsum(
+            "bkgqtu,bukh->bkgqth", p, vc.astype(jnp.float32))
+        return (m, l, o), None
+
+    con = lambda a: constrain(a, BATCH, None, None, "model",
+                              *([None] * (a.ndim - 4)))
+    acc0 = (con(jnp.full((b, kv, g, nq, tq), NEG_INF, jnp.float32)),
+            con(jnp.zeros((b, kv, g, nq, tq), jnp.float32)),
+            con(jnp.zeros((b, kv, g, nq, tq, hd), jnp.float32)))
+    (m, l, o), _ = jax.lax.scan(inner, acc0, (k, v, kp))
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    # (B,KV,G,nq,Tq,hd) -> (B, nq*Tq, KV*G, hd)
+    out = out.transpose(0, 3, 4, 1, 2, 5).reshape(b, nq * tq, kv * g, hd)
+    return out.astype(v.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_positions: jax.Array, kv_positions: jax.Array,
+                    *, window: Optional[int] = None,
+                    q_chunk: int = 1024, kv_chunk: int = 4096,
+                    ctx_parallel: bool = False) -> jax.Array:
+    """Causal (optionally windowed) attention without materializing scores.
+
+    q: (B, Sq, H, hd) with H = KV * G;  k, v: (B, Skv, KV, hd).
+    q_positions: (Sq,) absolute positions;  kv_positions: (Skv,).
+    ``ctx_parallel``: forward-only context-parallel path (see above).
+    Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    q = q.reshape(b, sq, kv, g, hd)
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq = -(-sq // q_chunk)
+    nk = -(-skv // kv_chunk)
+    # pad to whole chunks (padding keys get position +inf -> fully masked)
+    qpad, kpad = nq * q_chunk - sq, nk * kv_chunk - skv
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, qpad))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, kpad),
+                               constant_values=2**30)
+
+    qs = q.reshape(b, nq, q_chunk, kv, g, hd)
+    qp = q_positions.reshape(nq, q_chunk)
+    ks = k.reshape(b, nk, kv_chunk, kv, hd)
+    vs = v.reshape(b, nk, kv_chunk, kv, hd)
+    kp = kv_positions.reshape(nk, kv_chunk)
+
+    band = (-(-((window or 0) + q_chunk) // kv_chunk) + 1) * kv_chunk
+    if window is not None and nk * kv_chunk > band:
+        # static-size KV band per query chunk: linear-in-S total work
+
+        def per_qchunk(qc, qpc, qi):
+            start = jnp.clip(qi * q_chunk + q_chunk - band,
+                             0, nk * kv_chunk - band)
+            kb = jax.lax.dynamic_slice_in_dim(
+                k, start, band, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            kpb = jax.lax.dynamic_slice_in_dim(kv_positions, start, band)
+            m, l, pv = _attend_block(qc, kb, vb, qpc, kpb, window, scale)
+            out = pv / jnp.maximum(l, 1e-30)[..., None].astype(pv.dtype)
+            return out                                   # (B,KV,G,Tq,hd)
+
+        outs = jax.lax.map(
+            lambda args: per_qchunk(*args),
+            (jnp.moveaxis(qs, 1, 0), qp, jnp.arange(nq)))
+        out = jnp.moveaxis(outs, 0, 1)                   # (B,nq,KV,G,Tq,hd)
+        out = out.transpose(0, 1, 4, 2, 3, 5)            # -> B,nq,Tq,KV,G,hd
+        out = out.reshape(b, nq * q_chunk, h, hd)
+        return out[:, :sq]
+
+    if ctx_parallel and nq > 1:
+        out = _ctx_parallel_flash(qs, jnp.moveaxis(ks, 1, 0),
+                                  jnp.moveaxis(vs, 1, 0), qp, kp,
+                                  window, scale)
+        return out[:, :sq]
+
+    # full-causal path: custom-VJP flash core (chunk-recomputing backward —
+    # default AD through the kv-scan stacks S^2-sized residuals, measured
+    # as 34% of llama train HBM traffic; see EXPERIMENTS §Perf)
+    from .flash_vjp import flash_core
+    out5 = flash_core(q, k, v, q_positions, kv_positions, window,
+                      q_chunk, kv_chunk)                 # (B,Sq,KV,G,hd)
+    out = out5.reshape(b, nq * q_chunk, h, hd)
+    return out[:, :sq]
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     q_position: jax.Array, kv_positions: jax.Array,
+                     *, window: Optional[int] = None) -> jax.Array:
+    """Single-token attention over a (possibly ring-buffer) KV cache.
+
+    q: (B, 1, H, hd); caches: (B, C, KV, hd); kv_positions: (B, C) absolute
+    positions of cache slots (-1 for empty).  Ring caches pass their slot
+    position array; masking handles both validity and the window.
+    """
+    b, _, h, hd = q.shape
+    c, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(b, kv, g, hd)
+    s = jnp.einsum("bkgh,bukh->bkgu", qr, k_cache) * scale
+    valid = (kv_positions >= 0) & (kv_positions <= q_position[:, None])
+    if window is not None:
+        valid &= kv_positions > (q_position[:, None] - window)
+    s = jnp.where(valid[:, None, None], s.astype(jnp.float32), NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgu,bukh->bkgh", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, 1, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_params(key, d, ff, act, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "silu":
+        return {"gate": dense_init(k1, (d, ff), dtype),
+                "up": dense_init(k2, (d, ff), dtype),
+                "down": dense_init(k3, (ff, d), dtype)}
+    return {"up": dense_init(k1, (d, ff), dtype),
+            "down": dense_init(k2, (ff, d), dtype)}
+
+
+def mlp_apply(p, x, act):
+    if act == "silu":
+        h = jax.nn.silu(x @ p["gate"]) * (x @ p["up"])
+    else:
+        h = jax.nn.gelu(x @ p["up"])
+    return h @ p["down"]

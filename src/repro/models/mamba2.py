@@ -1,0 +1,161 @@
+"""Mamba2 block — SSD (state-space duality) with chunked scan.
+
+Training/prefill uses the SSD chunked algorithm: quadratic attention-like
+compute *within* fixed-size chunks (dense, MXU-friendly) plus a sequential
+inter-chunk state recurrence of length S / chunk (tiny lax.scan).  Decode
+carries the (H, P, N) state: O(1) per token — the ``long_500k`` path.
+
+The chunk decomposition is the SSD-paper analogue of HBMC's two-level
+blocking: chunk = level-1 block (parallel axis), in-chunk lanes = level-2
+rounds (dense vector work); see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.constraints import BATCH, constrain
+
+from .layers import dense_init, rmsnorm
+
+
+def mamba2_params(key, d, state, head_dim, conv_width, dtype):
+    d_in = 2 * d
+    nheads = d_in // head_dim
+    conv_dim = d_in + 2 * state
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * state + nheads), dtype),
+        "conv": (jax.random.normal(ks[1], (conv_width, conv_dim)) * 0.1
+                 ).astype(dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(dtype),
+        "d_skip": jnp.ones((nheads,), dtype),
+        "dt_bias": jnp.zeros((nheads,), dtype),
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": dense_init(ks[4], (d_in, d), dtype),
+    }
+
+
+def _split_proj(p, u, d_in, state, nheads):
+    zxbcdt = u @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * state], axis=-1)
+    return z, xbc, dt
+
+
+def _conv(xbc, w, conv_state=None):
+    cw = w.shape[0]
+    if conv_state is None:
+        pad = jnp.pad(xbc, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([conv_state, xbc], axis=1)
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(cw))
+    new_state = pad[:, -(cw - 1):] if cw > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, a, b_, c_, chunk: int):
+    """SSD scan.  x: (B,L,H,P); dt: (B,L,H); a: (H,) negative;
+    b_, c_: (B,L,N).  Returns y: (B,L,H,P) and final state (B,H,P,N)."""
+    bsz, l, h, p = x.shape
+    n = b_.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_ = jnp.pad(b_, ((0, 0), (0, pad), (0, 0)))
+        c_ = jnp.pad(c_, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    bc = b_.reshape(bsz, nc, chunk, n)
+    cc = c_.reshape(bsz, nc, chunk, n)
+
+    # chunk axis = sequence parallelism over the TP mesh axis: intra-chunk
+    # quadratic work is chunk-local, so the (B, nc, Q, Q, H) tensors shard
+    # cleanly over `model`; only the tiny inter-chunk states cross it.
+    xc = constrain(xc, BATCH, "model", None, None, None)
+    bc = constrain(bc, BATCH, "model", None, None)
+    cc = constrain(cc, BATCH, "model", None, None)
+    dtc = constrain(dtc, BATCH, "model", None, None)
+
+    da = dtc * a.astype(jnp.float32)                    # (B,nc,Q,H)
+    cum = jnp.cumsum(da, axis=2)                        # inclusive
+    seg = cum[:, :, -1:]                                # chunk total (B,nc,1,H)
+
+    # intra-chunk (masked quadratic); mask BEFORE exp so the grad of the
+    # masked-out (explosive) entries is exactly zero, not inf*0.
+    # The (B,nc,Q,Q,H) tensors stay in the activation dtype (bf16 on TPU)
+    # with f32 accumulation in the dots — exp factors are <= 1 so bf16 is
+    # safe, and this halves the dominant HBM traffic (EXPERIMENTS §Perf).
+    cdt = x.dtype
+    diff = cum[:, :, :, None] - cum[:, :, None, :]      # (B,nc,Qi,Qj,H)
+    iq = jnp.arange(chunk)
+    mask = iq[:, None] >= iq[None, :]
+    diff = jnp.where(mask[None, None, :, :, None], diff, -jnp.inf)
+    lmat = jnp.exp(diff).astype(cdt)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc,
+                    preferred_element_type=jnp.float32).astype(cdt)
+    w = cb[..., None] * lmat * dtc[:, :, None].astype(cdt)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc,
+                         preferred_element_type=jnp.float32)
+
+    # per-chunk input states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)     # (B,nc,Q,H)
+    sc = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                    (decay_to_end * dtc).astype(cdt), bc, xc,
+                    preferred_element_type=jnp.float32)  # (B,nc,H,P,N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(seg[:, :, 0])                 # (B,nc,H)
+
+    def step(s_prev, ys):
+        dcy, s_in = ys                                  # (B,H), (B,H,P,N)
+        s_new = s_prev * dcy[:, :, None, None] + s_in
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, h, p, n), dtype=jnp.float32)
+    s_last, s_prevs = jax.lax.scan(
+        step, s0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(sc, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)               # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                         cc, s_prevs.astype(cdt),
+                         jnp.exp(cum).astype(cdt),
+                         preferred_element_type=jnp.float32)
+    y = (y_intra + y_inter).reshape(bsz, nc * chunk, h, p)[:, :l]
+    return y.astype(x.dtype), s_last
+
+
+def mamba2_apply(p, u, state=None, conv_state=None, *, d_model, ssm_state,
+                 head_dim, chunk):
+    """u: (B, S, d).  Returns (y, (ssm_state, conv_state))."""
+    d_in = 2 * d_model
+    nheads = d_in // head_dim
+    bsz, s, _ = u.shape
+    z, xbc, dt = _split_proj(p, u, d_in, ssm_state, nheads)
+    xbc, conv_state = _conv(xbc, p["conv"], conv_state)
+    x, b_, c_ = jnp.split(xbc, [d_in, d_in + ssm_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = x.reshape(bsz, s, nheads, head_dim)
+
+    if s == 1:                                          # decode fast path
+        h_prev = (jnp.zeros((bsz, nheads, head_dim, ssm_state),
+                            dtype=jnp.float32) if state is None else state)
+        da = jnp.exp(dt[:, 0] * a)                      # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0],
+                         b_[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        h = h_prev * da[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", c_[:, 0].astype(jnp.float32), h)
+        y = y[:, None].astype(u.dtype)
+        state = h
+    else:
+        y, state = ssd_chunked(xh, dt, a, b_, c_, chunk)
+
+    y = y + xh.astype(y.dtype) * p["d_skip"].astype(y.dtype)[None, None, :,
+                                                             None]
+    y = y.reshape(bsz, s, d_in)
+    y = rmsnorm(y * jax.nn.silu(z.astype(y.dtype)), p["norm"])
+    return y @ p["out_proj"], (state, conv_state)

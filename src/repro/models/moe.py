@@ -1,0 +1,83 @@
+"""Mixture-of-experts block with capacity-based dispatch.
+
+Top-k routing -> tokens scattered into a per-expert (E, C, d) buffer ->
+dense per-expert GEMMs -> weighted combine.  Compute scales with
+``tokens * top_k * capacity_factor`` (honest MoE FLOPs, unlike a dense
+all-experts einsum), and the expert axis is shardable over the mesh `model`
+axis (expert parallelism): under pjit the scatter/gather around the expert
+GEMMs lowers to all-to-all pairs, which is exactly the EP collective pattern
+the roofline analysis accounts for.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.constraints import constrain
+
+from .layers import dense_init, mlp_params, mlp_apply
+
+
+def moe_params(key, d, ff, n_experts, act, dtype):
+    kr, ke = jax.random.split(key)
+    expert_keys = jax.random.split(ke, n_experts)
+    experts = jax.vmap(lambda k: mlp_params(k, d, ff, act, dtype))(expert_keys)
+    return {"router": dense_init(kr, (d, n_experts), dtype, scale=0.02),
+            "experts": experts}
+
+
+def moe_apply(p, x, *, top_k: int, capacity_factor: float, act: str):
+    """x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    n_experts = p["router"].shape[-1]
+    logits = (xf @ p["router"]).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, top_k)                  # (T, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)      # renormalize
+
+    if capacity_factor <= 0:      # exact mode: no token can ever be dropped
+        capacity = t
+    else:
+        capacity = max(1, int(t * top_k * capacity_factor / n_experts))
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(idx, n_experts, dtype=jnp.int32)  # (T, k, E)
+    flat = onehot.reshape(t * top_k, n_experts)
+    pos = jnp.cumsum(flat, axis=0) - 1                        # (T*k, E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(t, top_k)      # (T, k)
+    keep = pos < capacity
+    gate = gate * keep
+
+    # scatter tokens into (E, C, d)
+    e_flat = idx.reshape(-1)
+    c_flat = jnp.clip(pos.reshape(-1), 0, capacity - 1)
+    buf = jnp.zeros((n_experts, capacity, d), dtype=x.dtype)
+    src = jnp.repeat(xf, top_k, axis=0)
+    w = keep.reshape(-1, 1).astype(x.dtype)
+    buf = buf.at[e_flat, c_flat].add(src * w)
+    # expert parallelism: the scatter above becomes an all-to-all into the
+    # expert-sharded layout (dropped gracefully when E % model != 0)
+    buf = constrain(buf, "model", None, None)
+
+    # dense per-expert GEMMs
+    out = jax.vmap(lambda ep, eb: mlp_apply(ep, eb, act))(p["experts"], buf)
+    out = constrain(out, "model", None, None)
+
+    # combine
+    gathered = out[e_flat, c_flat]                            # (T*k, d)
+    y = jnp.sum((gathered * gate.reshape(-1, 1).astype(x.dtype))
+                .reshape(t, top_k, d), axis=1)
+    return y.reshape(b, s, d), logits
+
+
+def load_balancing_loss(router_logits: jax.Array, idx_top1: jax.Array | None
+                        = None) -> jax.Array:
+    """Switch-style auxiliary loss (mean prob * mean assignment)."""
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    e = probs.shape[-1]
+    frac_prob = jnp.mean(probs, axis=0)
+    assign = jax.nn.one_hot(jnp.argmax(probs, axis=-1), e,
+                            dtype=jnp.float32)
+    frac_tokens = jnp.mean(assign, axis=0)
+    return e * jnp.sum(frac_prob * frac_tokens)

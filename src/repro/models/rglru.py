@@ -1,0 +1,97 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+    a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (sigmoid(W_x x_t) * x_t)
+
+Training/prefill uses an associative scan over (log a, b) pairs — O(log S)
+depth, fully parallel across (batch, width) lanes.  Decode carries h as the
+recurrent state: O(1) per token regardless of context length (this is what
+makes ``long_500k`` decode trivial for this family).
+
+Note the structural kinship with the paper: the recurrence is the solve of a
+*bidiagonal lower-triangular system* (I - shift(a)) h = b; the associative
+scan plays the role HBMC's round-parallelism plays for general sparsity
+(see DESIGN.md §4 and examples/rnn_as_trisolve.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+_C = 8.0
+
+
+def rglru_params(key, d, rw, conv_width, dtype):
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": dense_init(ks[0], (d, rw), dtype),
+        "in_y": dense_init(ks[1], (d, rw), dtype),
+        "conv": (jax.random.normal(ks[2], (conv_width, rw)) * 0.1).astype(dtype),
+        "gate_a": dense_init(ks[3], (rw, rw), dtype),
+        "gate_x": dense_init(ks[4], (rw, rw), dtype),
+        "lamb": jnp.linspace(0.5, 4.0, rw).astype(dtype),   # Lambda init
+        "out": dense_init(ks[5], (rw, d), dtype),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x: (B, S, rw); w: (cw, rw).
+
+    With ``state`` (B, cw-1, rw) performs the streaming step and returns the
+    updated state (decode path).
+    """
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state, x], axis=1)
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    new_state = pad[:, -(cw - 1):] if cw > 1 else None
+    return out, new_state
+
+
+def _rglru_core(u, ga, gx, lamb):
+    """Shared gate math.  u: (..., rw) pre-activation input."""
+    log_a = -_C * jax.nn.softplus(lamb.astype(jnp.float32)) \
+        * jax.nn.sigmoid((u @ ga).astype(jnp.float32))
+    gated = jax.nn.sigmoid((u @ gx).astype(jnp.float32)) * u.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    return log_a, b
+
+
+def rglru_apply(p, x, h0=None, conv_state=None):
+    """x: (B, S, d).  Returns (y, (h_last, conv_state)).
+
+    h0: (B, rw) initial recurrent state (None = zeros).
+    """
+    bsz, s, _ = x.shape
+    u = x @ p["in_x"]                                   # (B, S, rw)
+    branch = jax.nn.gelu(x @ p["in_y"])
+    u, conv_state = _causal_conv(u, p["conv"], conv_state)
+    log_a, b = _rglru_core(u, p["gate_a"], p["gate_x"], p["lamb"])
+
+    if s == 1:                                           # decode fast path
+        h_prev = jnp.zeros_like(b[:, 0]) if h0 is None else h0
+        h = jnp.exp(log_a[:, 0]) * h_prev + b[:, 0]
+        hs = h[:, None]
+    else:
+        if h0 is not None:
+            # fold the carried state in as a virtual step 0
+            log_a = jnp.concatenate(
+                [jnp.zeros_like(log_a[:, :1]), log_a], axis=1)
+            b = jnp.concatenate([h0.astype(b.dtype)[:, None], b], axis=1)
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 + a2, jnp.exp(a2) * b1 + b2
+
+        la, hs = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+        if h0 is not None:
+            hs = hs[:, 1:]
+        h = hs[:, -1]
+
+    y = (hs.astype(x.dtype) * branch) @ p["out"]
+    return y, (h, conv_state)

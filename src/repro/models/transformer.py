@@ -1,0 +1,376 @@
+"""Generic decoder stack covering all 10 assigned architectures.
+
+Layers are scanned over *pattern repeats*: the stack is
+``cfg.block_pattern`` (e.g. ``("rec","rec","attn")`` for RecurrentGemma)
+repeated ``cfg.pattern_repeats`` times, with every pattern position's params
+stacked over repeats.  A single ``lax.scan`` keeps the HLO O(1) in depth —
+required to compile llama3-405b x 512 devices in reasonable time.
+
+Caches (decode) are pytrees stacked the same way, scanned as xs/ys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.constraints import BATCH, constrain
+
+from .config import ArchConfig
+from . import layers as L
+from .layers import (apply_norm, decode_attention, dense_init,
+                     flash_attention, mlp_apply, mlp_params, norm_params,
+                     apply_rope)
+from .mamba2 import mamba2_apply, mamba2_params
+from .moe import load_balancing_loss, moe_apply, moe_params
+from .moe_shardmap import moe_apply_shardmap
+from .rglru import rglru_apply, rglru_params
+
+MROPE_SECTIONS = (16, 24, 24)   # Qwen2-VL mrope_section over head_dim/2
+
+
+# ---------------------------------------------------------------------------
+# per-block params
+# ---------------------------------------------------------------------------
+
+def _attn_params(cfg: ArchConfig, key, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln1": norm_params(ks[0], d, cfg.norm, dtype),
+        "wq": dense_init(ks[1], (d, h * hd), dtype),
+        "wk": dense_init(ks[2], (d, kv * hd), dtype),
+        "wv": dense_init(ks[3], (d, kv * hd), dtype),
+        "wo": dense_init(ks[4], (h * hd, d), dtype),
+        "ln2": norm_params(ks[5], d, cfg.norm, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    if cfg.n_experts:
+        p["moe"] = moe_params(ks[6], d, cfg.d_ff, cfg.n_experts, cfg.act,
+                              dtype)
+    else:
+        p["mlp"] = mlp_params(ks[6], d, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def _rec_params(cfg: ArchConfig, key, dtype):
+    d = cfg.d_model
+    rw = cfg.rnn_width or d
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": norm_params(ks[0], d, cfg.norm, dtype),
+        "lru": rglru_params(ks[1], d, rw, cfg.conv_width, dtype),
+        "ln2": norm_params(ks[2], d, cfg.norm, dtype),
+        "mlp": mlp_params(ks[3], d, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def _ssm_params(cfg: ArchConfig, key, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": norm_params(ks[0], cfg.d_model, cfg.norm, dtype),
+        "ssm": mamba2_params(ks[1], cfg.d_model, cfg.ssm_state,
+                             cfg.ssm_head_dim, cfg.conv_width, dtype),
+    }
+
+
+_BLOCK_INIT = {"attn": _attn_params, "rec": _rec_params, "ssm": _ssm_params}
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.bfloat16):
+    keys = jax.random.split(key, 4)
+    blocks = []
+    for i, kind in enumerate(cfg.block_pattern):
+        rep_keys = jax.random.split(jax.random.fold_in(keys[0], i),
+                                    cfg.pattern_repeats)
+        blocks.append(jax.vmap(
+            lambda k: _BLOCK_INIT[kind](cfg, k, dtype))(rep_keys))
+    p = {
+        "embed": dense_init(keys[1], (cfg.vocab, cfg.d_model), dtype,
+                            scale=0.02),
+        "blocks": tuple(blocks),
+        "ln_f": norm_params(keys[2], cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[3], (cfg.d_model, cfg.vocab), dtype)
+    return p
+
+
+def param_specs(cfg: ArchConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree of the params (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), dtype))
+
+
+# ---------------------------------------------------------------------------
+# per-block apply
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg, p, h):
+    b, s, _ = h.shape
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _prefill_cache(cfg, k, v, positions, build_len):
+    """Token-parallel cache construction (prefill): scatter the prompt's
+    K/V into a fresh cache — ring layout for windowed attention."""
+    b, s = k.shape[:2]
+    cap = min(build_len, cfg.attn_window) if cfg.attn_window else build_len
+    pos1d = (positions[0] if positions.ndim == 3 else positions)[0]  # (S,)
+    if s >= cap:
+        # keep exactly the last `cap` tokens, placed at slot p % cap
+        start = s - cap
+        j = jnp.arange(cap)
+        src = start + (j - start) % cap          # position living in slot j
+        kc = jnp.take(k, src, axis=1)
+        vc = jnp.take(v, src, axis=1)
+        pc = jnp.broadcast_to(jnp.take(pos1d, src)[None], (b, cap))
+        return {"k": kc, "v": vc, "pos": pc.astype(jnp.int32)}
+    kc = jnp.zeros((b, cap) + k.shape[2:], k.dtype).at[:, :s].set(k)
+    vc = jnp.zeros((b, cap) + v.shape[2:], v.dtype).at[:, :s].set(v)
+    pc = jnp.full((b, cap), -1, jnp.int32).at[:, :s].set(
+        jnp.broadcast_to(pos1d[None], (b, s)))
+    return {"k": kc, "v": vc, "pos": pc}
+
+
+def _attn_block(cfg: ArchConfig, p, x, positions, cache, cur_pos,
+                build_len=None):
+    """cache None -> training/prefill; else single-token decode."""
+    b = x.shape[0]
+    h = apply_norm(x, p["ln1"], cfg.norm, cfg.norm_eps)
+    # Megatron-SP transition: all-gather the sequence dim here; heads are
+    # model-sharded inside attention; the residual add reduce-scatters back
+    h = constrain(h, BATCH, None, None)
+    q, k, v = _project_qkv(cfg, p, h)
+    # tensor-parallel attention: q heads sharded over `model` (dropped
+    # gracefully when H % model != 0), k/v (small GQA heads) replicated —
+    # scores/context tensors then shard over heads instead of being
+    # computed redundantly on every model-axis device
+    q = constrain(q, BATCH, None, "model", None)
+    k = constrain(k, BATCH, None, None, None)
+    v = constrain(v, BATCH, None, None, None)
+    sections = MROPE_SECTIONS if cfg.m_rope else None
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta, sections)
+        k = apply_rope(k, positions, cfg.rope_theta, sections)
+    aux = jnp.zeros((), jnp.float32)
+    if cache is None:
+        pos1d = positions[0] if positions.ndim == 3 else positions
+        # prefill (no backward) of head-indivisible archs uses the
+        # context-parallel forward path
+        attn = flash_attention(q, k, v, pos1d[0], pos1d[0],
+                               window=cfg.attn_window,
+                               ctx_parallel=build_len is not None)
+        new_cache = (None if build_len is None
+                     else _prefill_cache(cfg, k, v, positions, build_len))
+    else:
+        cap = cache["k"].shape[1]
+        slot = (cur_pos % cap).astype(jnp.int32)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        kv_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.full((b, 1), cur_pos, dtype=cache["pos"].dtype),
+            slot, axis=1)
+        qpos = jnp.full((b,), cur_pos, dtype=jnp.int32)
+        attn = decode_attention(q, k_cache, v_cache, qpos, kv_pos,
+                                window=cfg.attn_window)
+        new_cache = {"k": k_cache, "v": v_cache, "pos": kv_pos}
+    x = x + attn.reshape(*attn.shape[:2], -1) @ p["wo"]
+
+    h2 = apply_norm(x, p["ln2"], cfg.norm, cfg.norm_eps)
+    h2 = constrain(h2, BATCH, None, None)     # SP transition (MLP side)
+    if cfg.n_experts:
+        # decode never drops tokens (exact capacity); training uses the
+        # configured capacity factor
+        cf = 0.0 if cache is not None else cfg.capacity_factor
+        res = None
+        if cache is None:
+            # production path: explicit shard_map dispatch (see
+            # moe_shardmap.py); engages only under an active mesh
+            res = moe_apply_shardmap(
+                p["moe"], h2, top_k=cfg.moe_top_k, capacity_factor=cf,
+                act=cfg.act)
+        if res is None:
+            res = moe_apply(p["moe"], h2, top_k=cfg.moe_top_k,
+                            capacity_factor=cf, act=cfg.act)
+        y, router_logits = res
+        aux = load_balancing_loss(router_logits)
+    else:
+        y = mlp_apply(p["mlp"], h2, cfg.act)
+    return x + y, new_cache, aux
+
+
+def _rec_block(cfg: ArchConfig, p, x, positions, cache, cur_pos,
+               build_len=None):
+    h = apply_norm(x, p["ln1"], cfg.norm, cfg.norm_eps)
+    h = constrain(h, BATCH, None, None)       # SP transition (recurrence)
+    h0 = cache["h"] if cache is not None else None
+    cs = cache["conv"] if cache is not None else None
+    y, (h_new, cs_new) = rglru_apply(p["lru"], h, h0, cs)
+    x = x + y
+    h2 = apply_norm(x, p["ln2"], cfg.norm, cfg.norm_eps)
+    h2 = constrain(h2, BATCH, None, None)     # SP transition (MLP side)
+    x = x + mlp_apply(p["mlp"], h2, cfg.act)
+    new_cache = ({"h": h_new, "conv": cs_new}
+                 if (cache is not None or build_len is not None) else None)
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+def _ssm_block(cfg: ArchConfig, p, x, positions, cache, cur_pos,
+               build_len=None):
+    h = apply_norm(x, p["ln1"], cfg.norm, cfg.norm_eps)
+    st = cache["state"] if cache is not None else None
+    cs = cache["conv"] if cache is not None else None
+    y, (st_new, cs_new) = mamba2_apply(
+        p["ssm"], h, st, cs, d_model=cfg.d_model, ssm_state=cfg.ssm_state,
+        head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk)
+    new_cache = ({"state": st_new, "conv": cs_new}
+                 if (cache is not None or build_len is not None) else None)
+    return x + y, new_cache, jnp.zeros((), jnp.float32)
+
+
+_BLOCK_APPLY = {"attn": _attn_block, "rec": _rec_block, "ssm": _ssm_block}
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Stacked-over-repeats cache pytree (tuple per pattern position)."""
+    caches = []
+    rw = cfg.rnn_width or cfg.d_model
+    d_in = 2 * cfg.d_model
+    conv_dim = d_in + 2 * cfg.ssm_state
+    for kind in cfg.block_pattern:
+        if kind == "attn":
+            cap = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+            c = {"k": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.head_dim),
+                                dtype),
+                 "v": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.head_dim),
+                                dtype),
+                 "pos": jnp.full((batch, cap), -1, jnp.int32)}
+        elif kind == "rec":
+            c = {"h": jnp.zeros((batch, rw), jnp.float32),
+                 "conv": jnp.zeros((batch, cfg.conv_width - 1, rw), dtype)}
+        else:
+            nheads = d_in // cfg.ssm_head_dim
+            c = {"state": jnp.zeros((batch, nheads, cfg.ssm_head_dim,
+                                     cfg.ssm_state), jnp.float32),
+                 "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim),
+                                   dtype)}
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[None], (cfg.pattern_repeats,) + a.shape), c))
+    return tuple(caches)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ArchConfig, inputs, positions,
+            cache=None, cur_pos=None, remat: bool = True,
+            build_cache_len: int | None = None,
+            return_hidden: bool = False):
+    """inputs: (B, S) int tokens, or (B, S, d) embeddings for frontend archs.
+
+    ``build_cache_len``: token-parallel prefill — build a decode-ready cache
+    of that capacity while processing the whole prompt at once.
+    ``return_hidden``: skip the LM head and return final hidden states
+    (the training loss fuses the head with a chunked cross entropy).
+
+    Returns (logits_or_hidden, new_cache, aux_loss).
+    """
+    if cfg.takes_embeddings and inputs.ndim == 3:
+        x = inputs
+    else:
+        x = jnp.take(params["embed"], inputs, axis=0)
+
+    def superblock(x, rep_params, rep_cache):
+        new_cache = []
+        aux = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(cfg.block_pattern):
+            c = None if rep_cache is None else rep_cache[i]
+            # sequence-parallel residual stream (Megatron-SP): the saved
+            # remat residual is (B, S/model, d) per layer — 16x less live
+            # activation memory; XLA inserts the all-gather/reduce-scatter
+            # pair at the block boundary.  constrain() drops the `model`
+            # entry automatically when S == 1 (decode) or indivisible.
+            sp = "model" if cfg.seq_parallel else None
+            x = constrain(x, BATCH, sp, None)
+            x, nc, a = _BLOCK_APPLY[kind](cfg, rep_params[i], x, positions,
+                                          c, cur_pos,
+                                          build_len=build_cache_len)
+            new_cache.append(nc)
+            aux = aux + a
+        return x, tuple(new_cache), aux
+
+    sb = jax.checkpoint(superblock) if remat and cache is None else superblock
+
+    def scan_body(carry, xs):
+        x, aux = carry
+        rep_params, rep_cache = xs
+        x, nc, a = sb(x, rep_params, rep_cache)
+        return (x, aux + a), nc
+
+    g = cfg.remat_group
+    if remat and cache is None and g > 1 and cfg.pattern_repeats % g == 0:
+        # nested (grouped) remat: checkpoint the carry only every g
+        # superblocks — live residuals drop from O(repeats) to
+        # O(repeats/g + g) at the cost of one extra forward per group
+        n_groups = cfg.pattern_repeats // g
+
+        def regroup(a):
+            return a.reshape(n_groups, g, *a.shape[1:])
+
+        blocks_g = jax.tree.map(regroup, params["blocks"])
+        cache_g = (None if cache is None
+                   else jax.tree.map(regroup, cache))
+
+        @jax.checkpoint
+        def group_body(carry, xs):
+            gp, gc = xs
+            return jax.lax.scan(scan_body, carry, (gp, gc))
+
+        (x, aux), new_cache = jax.lax.scan(
+            group_body, (x, jnp.zeros((), jnp.float32)),
+            (blocks_g, cache_g))
+        if new_cache is not None:
+            new_cache = jax.tree.map(
+                lambda a: a.reshape(-1, *a.shape[2:]), new_cache)
+    else:
+        (x, aux), new_cache = jax.lax.scan(
+            scan_body, (x, jnp.zeros((), jnp.float32)),
+            (params["blocks"], cache))
+
+    x = apply_norm(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    returns_cache = cache is not None or build_cache_len is not None
+    if return_hidden:
+        return x, (new_cache if returns_cache else None), aux
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head
+    return logits, (new_cache if returns_cache else None), aux

@@ -1,0 +1,69 @@
+"""Serving steps: batched prefill and single-token decode.
+
+``serve_step`` is what the ``decode_*`` / ``long_*`` dry-run shapes lower:
+one new token against a KV cache of the stated context length.  Caches for
+windowed-attention layers are ring buffers of the window size and recurrent
+layers carry O(1) state — which is why ``long_500k`` is a small, runnable
+step for the sub-quadratic archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward, init_cache
+from repro.models.config import ArchConfig
+
+
+def _decode_positions(cfg: ArchConfig, batch: int, cur_pos):
+    p = jnp.broadcast_to(jnp.asarray(cur_pos)[None, None], (batch, 1))
+    if cfg.m_rope:
+        p = jnp.broadcast_to(p[None], (3, batch, 1))
+    return p
+
+
+def prefill(params, cfg: ArchConfig, inputs, *, max_len: int,
+            cache_dtype=jnp.bfloat16):
+    """Token-parallel prefill: run the whole prompt through the stack once
+    (flash attention) while scattering K/V into a decode-ready cache —
+    ring layout for windowed layers, carried states for rec/ssm layers."""
+    b, s = inputs.shape[:2]
+    if cfg.m_rope:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, None], (3, b, s))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    logits, cache, _ = forward(params, cfg, inputs, positions,
+                               build_cache_len=max_len, remat=False)
+    cache = jax.tree.map(
+        lambda c: c.astype(cache_dtype)
+        if c.dtype in (jnp.float32, jnp.bfloat16) and c.ndim >= 4 else c,
+        cache)
+    return cache, logits                        # logits: (B, S, vocab)
+
+
+def serve_step(params, cache, tokens, cur_pos, *, cfg: ArchConfig):
+    """One decode step.  tokens: (B, 1) int32 (or (B,1,d) embeddings);
+    cur_pos: scalar int32 absolute position.  Returns (logits, new_cache)."""
+    b = tokens.shape[0]
+    logits, cache, _ = forward(params, cfg, tokens,
+                               _decode_positions(cfg, b, cur_pos),
+                               cache=cache, cur_pos=cur_pos)
+    return logits[:, 0], cache
+
+
+def greedy_generate(params, cfg: ArchConfig, prompt, n_new: int,
+                    *, max_len: int, cache_dtype=jnp.bfloat16):
+    """Tiny reference sampler used by the examples and tests."""
+    cache, logits = prefill(params, cfg, prompt, max_len=max_len,
+                            cache_dtype=cache_dtype)
+    b, s = prompt.shape[:2]
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+
+    def step(carry, t):
+        cache, tok = carry
+        lg, cache = serve_step(params, cache, tok, t, cfg=cfg)
+        nxt = jnp.argmax(lg, axis=-1)[:, None]
+        return (cache, nxt), nxt[:, 0]
+
+    (_, _), toks = jax.lax.scan(step, (cache, tok), s + jnp.arange(n_new))
+    return jnp.moveaxis(toks, 0, 1)            # (B, n_new)

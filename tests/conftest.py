@@ -1,0 +1,23 @@
+import jax
+import numpy as np
+import pytest
+
+# float64 is required for the solver-equivalence guarantees (the paper's
+# Table 5.2 iteration counts are only bitwise-stable in double precision).
+# Model tests pass explicit f32 dtypes, unaffected by this flag.
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _clear_jax_caches():
+    """XLA:CPU's JIT linker accumulates dylibs per compiled executable; a
+    full-suite run (~1000 compilations) can exhaust it ("Failed to
+    materialize symbols").  Dropping the compilation cache between test
+    modules keeps the process well under the limit."""
+    yield
+    jax.clear_caches()
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,74 @@
+"""End-to-end ICCG equivalence and correctness (paper Table 5.2 / Fig 5.1)."""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+import scipy.sparse.linalg as spla
+
+from repro.core import solve_iccg
+from repro.core.matrices import (PAPER_PROBLEMS, PAPER_SHIFTS, graph_laplacian,
+                                 laplace_2d, paper_problem)
+
+
+def _solve_all(a, b, bs=8, w=4, **kw):
+    return {m: solve_iccg(a, b, method=m, block_size=bs, w=w, **kw)
+            for m in ("mc", "bmc", "hbmc")}
+
+
+def test_bmc_hbmc_identical_iterations_paper_table52():
+    """The paper's central claim: HBMC is equivalent to BMC — identical
+    iteration counts on every dataset (Table 5.2)."""
+    for name in PAPER_PROBLEMS:
+        a, _ = paper_problem(name, scale="tiny")
+        b = np.random.default_rng(1).normal(size=a.shape[0])
+        shift = PAPER_SHIFTS.get(name, 0.0)
+        reps = _solve_all(a, b, shift=shift)
+        assert reps["bmc"].result.iterations == \
+            reps["hbmc"].result.iterations, name
+        assert reps["hbmc"].result.converged, name
+
+
+@pytest.mark.parametrize("bs,w", [(4, 2), (8, 4), (16, 8)])
+def test_equivalence_across_block_sizes(bs, w):
+    a = laplace_2d(24, 18)
+    b = np.random.default_rng(2).normal(size=a.shape[0])
+    r1 = solve_iccg(a, b, method="bmc", block_size=bs, w=w,
+                    record_history=True)
+    r2 = solve_iccg(a, b, method="hbmc", block_size=bs, w=w,
+                    record_history=True)
+    assert r1.result.iterations == r2.result.iterations
+    h1, h2 = r1.result.history, r2.result.history
+    m = ~np.isnan(h1)
+    np.testing.assert_allclose(h1[m], h2[m], rtol=1e-10)
+
+
+def test_solution_correct_vs_direct():
+    a = laplace_2d(20, 20)
+    b = np.random.default_rng(3).normal(size=a.shape[0])
+    x_ref = spla.spsolve(a.tocsc(), b)
+    for m in ("mc", "bmc", "hbmc"):
+        rep = solve_iccg(a, b, method=m, block_size=4, w=4, rtol=1e-10)
+        err = np.linalg.norm(rep.x - x_ref) / np.linalg.norm(x_ref)
+        assert err < 1e-8, (m, err)
+
+
+def test_sell_and_ell_spmv_same_convergence():
+    a = graph_laplacian(400, avg_degree=5, seed=4)
+    b = np.random.default_rng(5).normal(size=a.shape[0])
+    r_ell = solve_iccg(a, b, method="hbmc", block_size=8, w=4,
+                       spmv_format="ell")
+    r_sell = solve_iccg(a, b, method="hbmc", block_size=8, w=4,
+                        spmv_format="sell")
+    assert r_ell.result.iterations == r_sell.result.iterations
+    np.testing.assert_allclose(r_ell.x, r_sell.x, rtol=1e-9, atol=1e-9)
+
+
+def test_mc_typically_needs_more_iterations():
+    """Convergence advantage of block coloring (paper Table 5.2 trend)."""
+    wins = 0
+    for name in ("thermal2", "g3_circuit", "parabolic_fem"):
+        a, _ = paper_problem(name, scale="tiny")
+        b = np.random.default_rng(6).normal(size=a.shape[0])
+        reps = _solve_all(a, b)
+        if reps["mc"].result.iterations >= reps["bmc"].result.iterations:
+            wins += 1
+    assert wins >= 2, "block coloring should win on most problems"

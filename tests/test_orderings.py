@@ -1,0 +1,89 @@
+"""Ordering-layer invariants: MC / BMC / HBMC (paper §3-4)."""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (block_multicolor_ordering, check_er_condition,
+                        hbmc_from_bmc, multicolor_ordering,
+                        ordering_digraph_edges, pad_system, pad_system_hbmc,
+                        verify_level2_structure)
+from repro.core.matrices import graph_laplacian, laplace_2d, laplace_3d
+
+
+def random_spd(n, density, seed):
+    rng = np.random.default_rng(seed)
+    m = sp.random(n, n, density=density, random_state=rng, format="coo")
+    a = (m + m.T).tocsr()
+    a.setdiag(np.abs(a).sum(axis=1).A1 + 1.0
+              if hasattr(np.abs(a).sum(axis=1), "A1")
+              else np.asarray(np.abs(a).sum(axis=1)).ravel() + 1.0)
+    return a.tocsr()
+
+
+MATRICES = [
+    ("lap2d", laplace_2d(12, 9)),
+    ("lap3d", laplace_3d(5, 4, 3)),
+    ("graph", graph_laplacian(150, avg_degree=5, seed=2)),
+]
+
+
+@pytest.mark.parametrize("name,a", MATRICES)
+def test_mc_colors_are_independent_sets(name, a):
+    mc = multicolor_ordering(a)
+    coo = sp.coo_matrix(a)
+    mask = (coo.row != coo.col) & (coo.data != 0)
+    same = mc.colors[coo.row[mask]] == mc.colors[coo.col[mask]]
+    assert not same.any(), "adjacent unknowns share a color"
+
+
+@pytest.mark.parametrize("name,a", MATRICES)
+@pytest.mark.parametrize("bs", [3, 8])
+def test_bmc_blocks_partition_and_color(name, a, bs):
+    bmc = block_multicolor_ordering(a, bs)
+    n = a.shape[0]
+    # perm is a bijection onto a subset of padded slots
+    assert len(set(bmc.perm.tolist())) == n
+    assert bmc.n_padded % bs == 0
+    # blocks of the same color are mutually independent (no cross edges)
+    a_bar, _ = pad_system(a, None, bmc)
+    coo = sp.coo_matrix(a_bar)
+    blk = bmc.block_of_new
+    col = bmc.block_color
+    mask = (blk[coo.row] != blk[coo.col]) & (coo.data != 0)
+    same_color = col[blk[coo.row[mask]]] == col[blk[coo.col[mask]]]
+    assert not same_color.any(), "cross-block edge inside one color"
+
+
+@pytest.mark.parametrize("name,a", MATRICES)
+@pytest.mark.parametrize("bs,w", [(2, 2), (4, 3), (8, 4)])
+def test_hbmc_er_condition_and_level2(name, a, bs, w):
+    bmc = block_multicolor_ordering(a, bs)
+    hb = hbmc_from_bmc(bmc, w)
+    # ER condition (eq. 3.5) of the secondary reordering wrt the BMC system
+    a_bmc, _ = pad_system(a, None, bmc)
+    assert check_er_condition(a_bmc, hb.secondary_perm)
+    # identical ordering graphs <=> equivalent orderings (paper §4.2.1)
+    assert ordering_digraph_edges(a_bmc) == \
+        ordering_digraph_edges(a_bmc, hb.secondary_perm)
+    # level-2 diagonal blocks are diagonal matrices (eq. 4.7)
+    a_hb, _ = pad_system_hbmc(a, None, hb)
+    assert verify_level2_structure(a_hb, hb)
+    # padded size bookkeeping
+    assert hb.n_final % (bs * w) == 0
+    assert (~hb.is_dummy).sum() == a.shape[0]
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(12, 60), bs=st.integers(2, 6), w=st.integers(2, 5),
+       seed=st.integers(0, 10_000))
+def test_hbmc_property_random_spd(n, bs, w, seed):
+    a = random_spd(n, density=0.08, seed=seed)
+    bmc = block_multicolor_ordering(a, bs)
+    hb = hbmc_from_bmc(bmc, w)
+    a_bmc, _ = pad_system(a, None, bmc)
+    assert check_er_condition(a_bmc, hb.secondary_perm)
+    a_hb, _ = pad_system_hbmc(a, None, hb)
+    assert verify_level2_structure(a_hb, hb)
+    # the full permutation embeds every original unknown exactly once
+    assert len(set(hb.perm.tolist())) == n
