@@ -70,6 +70,28 @@ def main() -> None:
     print(f"\n== Fig 5.1 analogue: BMC vs HBMC residual overlay "
           f"({len(h1)} its, max |diff| = {dmax:.2e}) ==")
 
+    # ---- Backend comparison: XLA vs Pallas trisolve ----------------------
+    rows, us = _timed(T.backend_table, scale=args.scale)
+    csv_rows.append(("backend_xla_vs_pallas", us,
+                     ";".join(f"{r[0]}:xla={r[2]:.0f}us/pallas={r[3]:.0f}us"
+                              for r in rows)))
+    print("\n== Preconditioner apply: XLA vs Pallas backend "
+          "(interpret mode off-TPU) ==")
+    print(f"{'dataset':16s} {'n':>8s} {'XLA us':>10s} {'Pallas us':>10s}")
+    for name, n, t_xla, t_pal in rows:
+        print(f"{name:16s} {n:8d} {t_xla:10.0f} {t_pal:10.0f}")
+
+    # ---- Batched multi-RHS throughput ------------------------------------
+    rows, us = _timed(T.batched_throughput_table, scale=args.scale)
+    csv_rows.append(("batched_multirhs", us,
+                     ";".join(f"{r[0]}:B={r[2]}x{r[5]:.2f}x" for r in rows)))
+    print("\n== Batched multi-RHS PCG (one while_loop, per-RHS masking) ==")
+    print(f"{'dataset':16s} {'n':>8s} {'B':>4s} {'seq us/RHS':>11s} "
+          f"{'bat us/RHS':>11s} {'speedup':>8s}")
+    for name, n, bsz, us_seq, us_bat, speed in rows:
+        print(f"{name:16s} {n:8d} {bsz:4d} {us_seq:11.0f} {us_bat:11.0f} "
+              f"{speed:7.2f}x")
+
     # ---- §5.2.1: lane occupancy ------------------------------------------
     rows, us = _timed(T.lane_occupancy_table, scale=args.scale)
     csv_rows.append(("lane_occupancy", us,

@@ -25,7 +25,29 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:                      # optional: zstd compression (extras = "ckpt")
+    import zstandard
+except ImportError:       # pragma: no cover - exercised on minimal installs
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, level=6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise ImportError(
+                "checkpoint was written with zstd; `pip install zstandard` "
+                "to read it")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _flatten(tree) -> tuple[list[tuple[str, Any]], Any]:
@@ -49,7 +71,7 @@ def save_checkpoint(path: str, tree, step: int) -> str:
             "crc": zlib.crc32(buf), "data": buf,
         }
     raw = msgpack.packb(payload, use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=3).compress(raw)
+    comp = _compress(raw)
     tmp = os.path.join(path, f"tmp.{step}")
     final = os.path.join(path, f"step_{step:08d}.ckpt")
     with open(tmp, "wb") as f:
@@ -83,7 +105,7 @@ def load_checkpoint(file: str, like_tree, shardings=None) -> tuple[Any, int]:
     ``shardings`` (same structure) to place leaves onto a (possibly
     different) mesh — the elastic-rescale path."""
     with open(file, "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+        raw = _decompress(f.read())
     payload = msgpack.unpackb(raw, raw=False)
     leaves, treedef = _flatten(like_tree)
     shard_leaves = (None if shardings is None

@@ -5,13 +5,18 @@ from .graph import check_er_condition, invert_perm, ordering_digraph_edges, perm
 from .hbmc import (HBMCOrdering, hbmc_from_bmc, hbmc_ordering,
                    pad_system_hbmc, verify_level2_structure)
 from .ic0 import ic0, ic0_error, sequential_ic_solve
-from .iccg import PCGResult, pcg, spmv_ell, spmv_sell
+from .iccg import (BatchedPCGResult, PCGResult, pcg, pcg_batched, spmv_ell,
+                   spmv_ell_batched, spmv_sell, spmv_sell_batched)
 from .matrices import PAPER_PROBLEMS, PAPER_SHIFTS, paper_problem
-from .sell import (SellMatrix, StepTables, pack_ell, pack_factor,
-                   pack_factor_hbmc, pack_sell, pack_steps, rounds_bmc,
-                   rounds_hbmc, rounds_mc, rounds_natural)
+from .sell import (RoundMajorTables, SellMatrix, StepTables, pack_ell,
+                   pack_factor, pack_factor_hbmc, pack_sell, pack_steps,
+                   rounds_bmc, rounds_hbmc, rounds_mc, rounds_natural,
+                   to_round_major)
 from .smoothers import GSSmoother, build_gs_smoother, gs_solve
-from .solvers import ICCGReport, solve_iccg
-from .trisolve import (DeviceTables, HBMCPreconditioner, backward_solve,
+from .solvers import (BatchedICCGReport, ICCGReport, solve_iccg,
+                      solve_iccg_batched)
+from .trisolve import (BACKENDS, DeviceTables, HBMCPreconditioner,
+                       backward_solve, backward_solve_batched,
                        build_preconditioner, build_preconditioner_from_rounds,
-                       forward_solve, sequential_backward, sequential_forward)
+                       forward_solve, forward_solve_batched,
+                       sequential_backward, sequential_forward)

@@ -161,6 +161,57 @@ def pack_factor_hbmc(l_final: sp.csr_matrix, ordering: HBMCOrdering
 
 
 # ----------------------------------------------------------------------
+# Round-major repacking (the Pallas kernel's layout contract).
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RoundMajorTables:
+    """StepTables re-indexed into the dense *round-major* coordinate system.
+
+    The Pallas kernel (kernels/hbmc_trisolve.py) stores the solution vector
+    in execution order: lane ``t`` of round ``s`` lives at position
+    ``s * R + t``.  That turns the per-round scatter of the XLA path
+    (``y.at[rows].set``) into a dense contiguous VMEM store, which is the
+    TPU analogue of the paper's Fig. 4.6 contiguous AVX-512 stores.
+
+    ``cols`` here are *round-major positions* (entries of previous rounds),
+    produced by composing the StepTables column indices with the
+    HBMC-index -> round-major-position permutation.  ``rows`` keeps the
+    inverse map (the HBMC index of every lane, pad lanes -> ``n_slots-1``)
+    so solutions can be scattered back to HBMC order; it is the permutation
+    referred to throughout as "kept so solutions map back".
+    """
+    cols: np.ndarray   # (S, R, K) int32 — round-major gather positions
+    vals: np.ndarray   # (S, R, K) f64
+    dinv: np.ndarray   # (S, R) f64
+    rows: np.ndarray   # (S, R) int32 — HBMC index per lane (pad -> n_slots-1)
+    n_slots: int
+
+    @property
+    def shape(self):
+        return self.rows.shape + (self.cols.shape[-1],)
+
+
+def to_round_major(t: StepTables) -> RoundMajorTables:
+    """Convert scatter-by-``rows`` StepTables to the dense round-major layout.
+
+    Column indices that point at unknowns never assigned to any lane (only
+    the scratch pad slot, whose ``vals`` are zero) are mapped to ``S*R``;
+    the kernel reads them via ``jnp.take(..., fill_value=0)`` so the
+    out-of-range position contributes ``0 * 0``.
+    """
+    s_, r_ = t.rows.shape
+    pos = np.full(t.n_slots, s_ * r_, dtype=np.int64)
+    lane = np.arange(s_ * r_).reshape(s_, r_)
+    live_mask = t.rows != (t.n_slots - 1)
+    pos[t.rows[live_mask]] = lane[live_mask]
+    return RoundMajorTables(cols=pos[t.cols].astype(np.int32),
+                            vals=t.vals, dinv=t.dinv,
+                            rows=t.rows.astype(np.int32),
+                            n_slots=t.n_slots)
+
+
+# ----------------------------------------------------------------------
 # SELL-w packing of a full matrix for SpMV (paper's "sell_spmv" variant).
 # ----------------------------------------------------------------------
 

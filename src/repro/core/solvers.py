@@ -1,8 +1,14 @@
 """End-to-end parallel ICCG solvers: MC / BMC / HBMC (paper §5 solvers).
 
-``solve_iccg(a, b, method=...)`` performs the full pipeline:
+``solve_iccg(a, b, method=..., backend=...)`` performs the full pipeline:
 ordering -> permuted (padded) system -> shifted IC(0) -> step packing ->
-device PCG -> solution mapped back to the original order.
+device PCG -> solution mapped back to the original order.  ``backend``
+picks the triangular-solve implementation ("xla" fori_loop substitution or
+the "pallas" round-major kernel).
+
+``solve_iccg_batched(a, b2d, ...)`` is the multi-RHS front-end: all B
+right-hand sides advance through ONE device while_loop with per-RHS
+convergence masking, sharing every gather of the packed tables.
 """
 from __future__ import annotations
 
@@ -15,10 +21,11 @@ import scipy.sparse as sp
 
 from . import sell
 from .coloring import block_multicolor_ordering, multicolor_ordering, pad_system
-from .graph import invert_perm, permute_system
+from .graph import permute_system
 from .hbmc import hbmc_from_bmc, pad_system_hbmc
 from .ic0 import ic0
-from .iccg import PCGResult, pcg, spmv_ell, spmv_sell
+from .iccg import (BatchedPCGResult, PCGResult, pcg, pcg_batched, spmv_ell,
+                   spmv_ell_batched, spmv_sell, spmv_sell_batched)
 from .trisolve import build_preconditioner_from_rounds
 
 
@@ -34,97 +41,157 @@ class ICCGReport:
     solve_seconds: float
     lane_occupancy: float   # mean live lanes / padded lanes per round
     x: np.ndarray           # solution in ORIGINAL ordering
+    backend: str = "xla"
 
 
-def _report(method, res, n, npad, ncol, tables, t_setup, t_solve, x):
-    live = tables.live.astype(np.float64)
-    occ = float(np.mean(live / tables.rows.shape[1])) if len(live) else 1.0
-    return ICCGReport(method=method, result=res, n=n, n_padded=npad,
-                      n_colors=ncol, n_rounds=int(tables.rows.shape[0]),
-                      setup_seconds=t_setup, solve_seconds=t_solve,
-                      lane_occupancy=occ, x=x)
+@dataclasses.dataclass
+class BatchedICCGReport:
+    method: str
+    result: BatchedPCGResult
+    n: int
+    n_padded: int
+    n_colors: int
+    n_rounds: int
+    setup_seconds: float
+    solve_seconds: float
+    lane_occupancy: float
+    x: np.ndarray           # (n, B) solutions in ORIGINAL ordering
+    backend: str = "xla"
+
+
+@dataclasses.dataclass
+class _System:
+    """Ordered/padded system plus everything needed to run + undo it."""
+    a_bar: sp.csr_matrix
+    b_bar: np.ndarray | None
+    perm: np.ndarray        # original index -> padded-ordered index
+    n: int
+    n_padded: int
+    n_colors: int
+    fwd_rounds: list
+    bwd_rounds: list
+    drop: np.ndarray | None
+
+
+def _order_system(a: sp.csr_matrix, b: np.ndarray | None, method: str,
+                  block_size: int, w: int) -> _System:
+    n = a.shape[0]
+    if method == "mc":
+        mc = multicolor_ordering(a)
+        a_bar, b_bar = permute_system(a, b, mc.perm)
+        return _System(a_bar, b_bar, mc.perm, n, n, mc.n_colors,
+                       sell.rounds_mc(mc, reverse=False),
+                       sell.rounds_mc(mc, reverse=True), None)
+    if method == "bmc":
+        bmc = block_multicolor_ordering(a, block_size)
+        a_bar, b_bar = pad_system(a, b, bmc)
+        return _System(a_bar, b_bar, bmc.perm, n, bmc.n_padded, bmc.n_colors,
+                       sell.rounds_bmc(bmc, reverse=False),
+                       sell.rounds_bmc(bmc, reverse=True), bmc.is_dummy)
+    if method == "hbmc":
+        bmc = block_multicolor_ordering(a, block_size)
+        hb = hbmc_from_bmc(bmc, w)
+        a_bar, b_bar = pad_system_hbmc(a, b, hb)
+        return _System(a_bar, b_bar, hb.perm, n, hb.n_final, hb.n_colors,
+                       sell.rounds_hbmc(hb, reverse=False),
+                       sell.rounds_hbmc(hb, reverse=True), hb.is_dummy)
+    if method == "natural":
+        return _System(a, b, np.arange(n), n, n, n,
+                       sell.rounds_natural(n, reverse=False),
+                       sell.rounds_natural(n, reverse=True), None)
+    raise ValueError(f"unknown method {method!r}")
+
+
+def _build_spmv(a_bar, spmv_format: str, w: int, dtype, batched: bool):
+    if spmv_format == "sell":
+        sm = sell.pack_sell(a_bar, w)
+        vals = jnp.asarray(sm.vals, dtype=dtype)
+        cols = jnp.asarray(sm.cols)
+        if batched:
+            return lambda x: spmv_sell_batched(vals, cols, x, sm.n)
+        return lambda x: spmv_sell(vals, cols, x, sm.n)
+    cols_h, vals_h = sell.pack_ell(a_bar)
+    vals = jnp.asarray(vals_h, dtype=dtype)
+    cols = jnp.asarray(cols_h)
+    if batched:
+        return lambda x: spmv_ell_batched(vals, cols, x)
+    return lambda x: spmv_ell(vals, cols, x)
 
 
 def solve_iccg(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
                block_size: int = 32, w: int = 8, shift: float = 0.0,
                rtol: float = 1e-7, maxiter: int = 10_000,
                spmv_format: str = "ell", dtype=jnp.float64,
-               record_history: bool = False) -> ICCGReport:
+               record_history: bool = False, backend: str = "xla",
+               interpret: bool = True) -> ICCGReport:
     a = sp.csr_matrix(a)
-    n = a.shape[0]
     b = np.asarray(b, dtype=np.float64)
     t0 = time.perf_counter()
 
-    if method == "mc":
-        mc = multicolor_ordering(a)
-        a_bar, b_bar = permute_system(a, b, mc.perm)
-        perm = mc.perm
-        npad, ncol = n, mc.n_colors
-        fwd_rounds = sell.rounds_mc(mc, reverse=False)
-        bwd_rounds = sell.rounds_mc(mc, reverse=True)
-        drop = None
-    elif method == "bmc":
-        bmc = block_multicolor_ordering(a, block_size)
-        a_bar, b_bar = pad_system(a, b, bmc)
-        perm = bmc.perm
-        npad, ncol = bmc.n_padded, bmc.n_colors
-        fwd_rounds = sell.rounds_bmc(bmc, reverse=False)
-        bwd_rounds = sell.rounds_bmc(bmc, reverse=True)
-        drop = bmc.is_dummy
-    elif method == "hbmc":
-        bmc = block_multicolor_ordering(a, block_size)
-        hb = hbmc_from_bmc(bmc, w)
-        a_bar, b_bar = pad_system_hbmc(a, b, hb)
-        perm = hb.perm
-        npad, ncol = hb.n_final, hb.n_colors
-        fwd_rounds = sell.rounds_hbmc(hb, reverse=False)
-        bwd_rounds = sell.rounds_hbmc(hb, reverse=True)
-        drop = hb.is_dummy
-    elif method == "natural":
-        a_bar, b_bar = a, b
-        perm = np.arange(n)
-        npad, ncol = n, n
-        fwd_rounds = sell.rounds_natural(n, reverse=False)
-        bwd_rounds = sell.rounds_natural(n, reverse=True)
-        drop = None
-    else:
-        raise ValueError(f"unknown method {method!r}")
-
-    l_bar = ic0(a_bar, shift=shift)
+    sysd = _order_system(a, b, method, block_size, w)
+    l_bar = ic0(sysd.a_bar, shift=shift)
     precond = build_preconditioner_from_rounds(
-        l_bar, fwd_rounds, bwd_rounds, drop_mask=drop, dtype=dtype)
+        l_bar, sysd.fwd_rounds, sysd.bwd_rounds, drop_mask=sysd.drop,
+        dtype=dtype, backend=backend, interpret=interpret)
+    spmv = _build_spmv(sysd.a_bar, spmv_format, w, dtype, batched=False)
 
-    if spmv_format == "sell":
-        sm = sell.pack_sell(a_bar, w)
-        vals = jnp.asarray(sm.vals, dtype=dtype)
-        cols = jnp.asarray(sm.cols)
-        spmv = lambda x: spmv_sell(vals, cols, x, sm.n)
-    else:
-        cols_h, vals_h = sell.pack_ell(a_bar)
-        vals = jnp.asarray(vals_h, dtype=dtype)
-        cols = jnp.asarray(cols_h)
-        spmv = lambda x: spmv_ell(vals, cols, x)
-
-    b_dev = jnp.asarray(b_bar, dtype=dtype)
+    b_dev = jnp.asarray(sysd.b_bar, dtype=dtype)
     t1 = time.perf_counter()
     res = pcg(spmv, precond, b_dev, rtol=rtol, maxiter=maxiter,
               record_history=record_history)
     t2 = time.perf_counter()
 
-    x = np.zeros(n, dtype=np.float64)
-    x[:] = res.x[perm]  # res.x is in new order; x_orig[i] = x_bar[perm[i]]
-    return _report(method, res, n, npad, ncol, precond.fwd_host_live
-                   if hasattr(precond, "fwd_host_live") else _LiveShim(
-                       fwd_rounds, drop),
-                   t1 - t0, t2 - t1, x)
+    x = np.asarray(res.x[sysd.perm])  # x_orig[i] = x_bar[perm[i]]
+    return ICCGReport(
+        method=method, result=res, n=sysd.n, n_padded=sysd.n_padded,
+        n_colors=sysd.n_colors, n_rounds=precond.n_rounds,
+        setup_seconds=t1 - t0, solve_seconds=t2 - t1,
+        lane_occupancy=_occupancy_from_rounds(sysd.fwd_rounds, sysd.drop),
+        x=x, backend=backend)
 
 
-class _LiveShim:
-    """Adapter exposing .live and .rows like StepTables for reporting."""
-    def __init__(self, rounds, drop):
-        if drop is not None:
-            rounds = [r[~drop[r]] for r in rounds]
-            rounds = [r for r in rounds if len(r)]
-        self.live = np.array([len(r) for r in rounds], dtype=np.int32)
-        rmax = int(self.live.max(initial=1))
-        self.rows = np.zeros((len(rounds), rmax), dtype=np.int32)
+def solve_iccg_batched(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
+                       block_size: int = 32, w: int = 8, shift: float = 0.0,
+                       rtol: float = 1e-7, maxiter: int = 10_000,
+                       spmv_format: str = "ell", dtype=jnp.float64,
+                       backend: str = "xla",
+                       interpret: bool = True) -> BatchedICCGReport:
+    """Solve A x_j = b_j for all columns of ``b`` ((n, B)) in one PCG loop."""
+    a = sp.csr_matrix(a)
+    b = np.asarray(b, dtype=np.float64)
+    if b.ndim != 2:
+        raise ValueError(f"solve_iccg_batched expects b of shape (n, B), "
+                         f"got {b.shape}")
+    t0 = time.perf_counter()
+
+    sysd = _order_system(a, None, method, block_size, w)
+    l_bar = ic0(sysd.a_bar, shift=shift)
+    precond = build_preconditioner_from_rounds(
+        l_bar, sysd.fwd_rounds, sysd.bwd_rounds, drop_mask=sysd.drop,
+        dtype=dtype, backend=backend, interpret=interpret)
+    spmv = _build_spmv(sysd.a_bar, spmv_format, w, dtype, batched=True)
+
+    b_bar = np.zeros((sysd.n_padded, b.shape[1]))
+    b_bar[sysd.perm] = b                  # embed every RHS into padded order
+    b_dev = jnp.asarray(b_bar, dtype=dtype)
+    t1 = time.perf_counter()
+    res = pcg_batched(spmv, precond.apply_batched, b_dev, rtol=rtol,
+                      maxiter=maxiter)
+    t2 = time.perf_counter()
+
+    x = np.asarray(res.x[sysd.perm])      # (n, B) back in original order
+    return BatchedICCGReport(
+        method=method, result=res, n=sysd.n, n_padded=sysd.n_padded,
+        n_colors=sysd.n_colors, n_rounds=precond.n_rounds,
+        setup_seconds=t1 - t0, solve_seconds=t2 - t1,
+        lane_occupancy=_occupancy_from_rounds(sysd.fwd_rounds, sysd.drop),
+        x=x, backend=backend)
+
+
+def _occupancy_from_rounds(rounds, drop) -> float:
+    if drop is not None:
+        rounds = [r[~drop[r]] for r in rounds]
+        rounds = [r for r in rounds if len(r)]
+    live = np.array([len(r) for r in rounds], dtype=np.float64)
+    rmax = live.max(initial=1.0)
+    return float(np.mean(live / rmax)) if len(live) else 1.0

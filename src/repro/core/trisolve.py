@@ -6,16 +6,23 @@ fully-parallel gather / fused-multiply-subtract / scale over all live lanes
 pure VPU element-wise + gather; rounds are a ``lax.fori_loop`` so the HLO is
 O(1) in problem size.
 
-Two device paths:
-  * ``forward_solve`` / ``backward_solve`` — pure jnp (XLA), the production
-    fallback and the oracle for the Pallas kernel.
-  * ``repro.kernels.hbmc_trisolve`` — Pallas kernel with explicit VMEM
-    blocking (see kernels/), validated against this module.
+Two device backends, selected by ``build_preconditioner(..., backend=...)``:
+  * ``"xla"``    — ``forward_solve`` / ``backward_solve``, pure jnp
+    (``fori_loop`` + scatter), the production fallback and the oracle the
+    Pallas kernel is validated against.
+  * ``"pallas"`` — ``repro.kernels.hbmc_trisolve`` operating on the dense
+    round-major repacking (``sell.to_round_major``), with explicit VMEM
+    blocking; contiguous stores instead of scatters.  Pass
+    ``interpret=False`` on real TPU hardware.
+
+Both backends expose a multi-RHS path (``apply_batched``) consumed by the
+batched PCG front-end (``iccg.pcg_batched``).
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +31,8 @@ import scipy.sparse as sp
 
 from .hbmc import HBMCOrdering
 from .sell import StepTables, pack_factor_hbmc
+
+BACKENDS = ("xla", "pallas")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -76,6 +85,31 @@ def _substitute(tables: DeviceTables, q: jax.Array,
     return y[:-1]
 
 
+def _substitute_batched(tables: DeviceTables, q: jax.Array) -> jax.Array:
+    """Multi-RHS variant of ``_substitute``.  q: (n_slots-1, B).
+
+    Per-column arithmetic follows the single-RHS path (same gather, same
+    K-reduction) up to XLA's reassociation of the einsum, so each column
+    agrees with the corresponding single-RHS solve to rounding — tight
+    enough that batched PCG reproduces single-RHS iteration counts.
+    """
+    n_slots = tables.n_slots
+    b = q.shape[1]
+    y0 = jnp.zeros((n_slots, b), dtype=q.dtype)
+    qp = jnp.concatenate([q, jnp.zeros((1, b), dtype=q.dtype)], axis=0)
+    S = tables.rows.shape[0]
+
+    def body(s, y):
+        rows = tables.rows[s]                       # (R,)
+        gathered = y[tables.cols[s]]                # (R, K, B)
+        acc = jnp.einsum("rk,rkb->rb", tables.vals[s], gathered)
+        t = (qp[rows] - acc) * tables.dinv[s][:, None]
+        return y.at[rows].set(t)
+
+    y = jax.lax.fori_loop(0, S, body, y0)
+    return y[:-1]
+
+
 @jax.jit
 def forward_solve(tables: DeviceTables, q: jax.Array) -> jax.Array:
     """y = L^{-1} q over the packed forward tables (eq. 4.12-4.18)."""
@@ -88,37 +122,93 @@ def backward_solve(tables: DeviceTables, y: jax.Array) -> jax.Array:
     return _substitute(tables, y)
 
 
+@jax.jit
+def forward_solve_batched(tables: DeviceTables, q: jax.Array) -> jax.Array:
+    """Y = L^{-1} Q over the packed forward tables.  Q: (n, B)."""
+    return _substitute_batched(tables, q)
+
+
+@jax.jit
+def backward_solve_batched(tables: DeviceTables, y: jax.Array) -> jax.Array:
+    """Z = L^{-T} Y over the packed backward tables.  Y: (n, B)."""
+    return _substitute_batched(tables, y)
+
+
 @dataclasses.dataclass(frozen=True)
 class HBMCPreconditioner:
-    """IC(0) preconditioner  M^{-1} r = (L L^T)^{-1} r  in HBMC order."""
-    fwd: DeviceTables
-    bwd: DeviceTables
+    """IC(0) preconditioner  M^{-1} r = (L L^T)^{-1} r  in HBMC order.
+
+    ``backend`` selects the triangular-solve implementation:
+      * ``"xla"``    — fori_loop substitution over ``fwd``/``bwd``
+        (``kernel`` is None);
+      * ``"pallas"`` — the round-major Pallas kernel held in ``kernel``
+        (a ``repro.kernels.ops.KernelPreconditioner``); ``fwd``/``bwd``
+        are None so the (S, R, K) tables live on device only once.  The
+        sharded path (core.partition) consumes DeviceTables, i.e. the
+        "xla" layout.
+    """
+    fwd: DeviceTables | None
+    bwd: DeviceTables | None
     n_final: int
+    backend: str = "xla"
+    kernel: Any = None
+
+    @property
+    def n_rounds(self) -> int:
+        t = self.fwd if self.fwd is not None else self.kernel.fwd
+        return int(t.rows.shape[0])
 
     def __call__(self, r: jax.Array) -> jax.Array:
+        if self.backend == "pallas":
+            return self.kernel(r)
         y = forward_solve(self.fwd, r)
         return backward_solve(self.bwd, y)
 
+    def apply_batched(self, r: jax.Array) -> jax.Array:
+        """Multi-RHS apply: r (n, B) -> (n, B), columns independent."""
+        if self.backend == "pallas":
+            return self.kernel.apply_batched(r)
+        y = forward_solve_batched(self.fwd, r)
+        return backward_solve_batched(self.bwd, y)
 
-def build_preconditioner(l_final: sp.csr_matrix, ordering: HBMCOrdering,
-                         dtype=jnp.float64) -> HBMCPreconditioner:
-    fwd_h, bwd_h = pack_factor_hbmc(l_final, ordering)
+
+def _assemble_preconditioner(fwd_h: StepTables, bwd_h: StepTables,
+                             n_final: int, dtype, backend: str,
+                             interpret: bool) -> HBMCPreconditioner:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of "
+                         f"{BACKENDS}")
+    if backend == "pallas":
+        # deferred import: repro.kernels.ops itself imports repro.core.sell
+        from repro.kernels.ops import build_kernel_preconditioner
+        kernel = build_kernel_preconditioner(fwd_h, bwd_h, dtype=dtype,
+                                             use_kernel=True,
+                                             interpret=interpret)
+        return HBMCPreconditioner(fwd=None, bwd=None, n_final=n_final,
+                                  backend=backend, kernel=kernel)
     return HBMCPreconditioner(
         fwd=DeviceTables.from_host(fwd_h, dtype=dtype),
         bwd=DeviceTables.from_host(bwd_h, dtype=dtype),
-        n_final=ordering.n_final)
+        n_final=n_final, backend=backend, kernel=None)
+
+
+def build_preconditioner(l_final: sp.csr_matrix, ordering: HBMCOrdering,
+                         dtype=jnp.float64, backend: str = "xla",
+                         interpret: bool = True) -> HBMCPreconditioner:
+    fwd_h, bwd_h = pack_factor_hbmc(l_final, ordering)
+    return _assemble_preconditioner(fwd_h, bwd_h, ordering.n_final, dtype,
+                                    backend, interpret)
 
 
 def build_preconditioner_from_rounds(
         l_final: sp.csr_matrix, fwd_rounds, bwd_rounds,
-        drop_mask=None, dtype=jnp.float64) -> HBMCPreconditioner:
+        drop_mask=None, dtype=jnp.float64, backend: str = "xla",
+        interpret: bool = True) -> HBMCPreconditioner:
     """Generic variant: MC / BMC / natural solvers share the machinery."""
     from .sell import pack_factor
     fwd_h, bwd_h = pack_factor(l_final, fwd_rounds, bwd_rounds, drop_mask)
-    return HBMCPreconditioner(
-        fwd=DeviceTables.from_host(fwd_h, dtype=dtype),
-        bwd=DeviceTables.from_host(bwd_h, dtype=dtype),
-        n_final=l_final.shape[0])
+    return _assemble_preconditioner(fwd_h, bwd_h, l_final.shape[0], dtype,
+                                    backend, interpret)
 
 
 # ---------------------------------------------------------------------------

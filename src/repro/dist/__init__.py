@@ -1,0 +1,13 @@
+"""Mesh-aware sharding rules and sharding-constraint helpers.
+
+Two small modules with no model knowledge:
+
+  * ``constraints`` — ``constrain(x, ...)`` annotations used inside model
+    code; no-ops when no mesh is active, and silently drop any axis that
+    would not divide evenly (so the same model code runs on 1..N devices).
+  * ``sharding``    — the greedy parameter/batch/cache partition rules used
+    by the launcher and the dry-run.
+"""
+from .constraints import BATCH, constrain
+from .sharding import (batch_partition_spec, cache_partition_spec,
+                       param_partition_spec, params_shardings)

@@ -1,0 +1,63 @@
+"""Sharding-constraint annotations for model code.
+
+``constrain(x, spec0, spec1, ...)`` is ``lax.with_sharding_constraint`` with
+three conveniences that let the same model code run unmodified on any mesh:
+
+  * when no mesh is active it is the identity;
+  * the ``BATCH`` sentinel expands to whichever batch-like mesh axes
+    ("pod", "data") exist, largest combination that divides the dimension;
+  * any entry naming an axis that is absent from the mesh, or that does not
+    divide the corresponding dimension, is dropped (replaced by ``None``)
+    instead of erroring — e.g. the sequence-parallel ``"model"`` entry
+    degrades gracefully at decode time when S == 1.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.interpreters import pxla
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .sharding import _axis_sizes, _batch_entry
+
+
+class _BatchSentinel:
+    """Marker for 'the batch axis of the mesh, whatever it is named'."""
+    def __repr__(self):
+        return "BATCH"
+
+
+BATCH = _BatchSentinel()
+
+
+def _current_mesh():
+    """The ambient ``with mesh:`` context, or None outside of one."""
+    mesh = pxla.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
+def _resolve_entry(entry, dim: int, mesh):
+    """One PartitionSpec entry -> validated entry (or None if indivisible)."""
+    if entry is None:
+        return None
+    if isinstance(entry, _BatchSentinel):
+        return _batch_entry(mesh, dim)
+    sizes = _axis_sizes(mesh)
+    axes = (entry,) if isinstance(entry, str) else tuple(entry)
+    if not all(a in sizes for a in axes):
+        return None
+    if dim % math.prod(sizes[a] for a in axes) != 0:
+        return None
+    return entry
+
+
+def constrain(x: jax.Array, *entries) -> jax.Array:
+    if len(entries) != x.ndim:
+        raise ValueError(f"constrain: {len(entries)} entries for rank-"
+                         f"{x.ndim} array")
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    spec = P(*[_resolve_entry(e, d, mesh) for e, d in zip(entries, x.shape)])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,91 @@
+"""Greedy, divisibility-safe partition rules for params, batches and caches.
+
+The contract (enforced by tests/test_infra.py) is:
+
+  * a spec NEVER names mesh axes whose product does not divide the
+    corresponding array dimension — this is what guarantees every
+    architecture lowers on every mesh shape;
+  * large matrices are both tensor-parallel ("model" axis) and FSDP
+    ("data" axis) sharded: "model" goes to the largest divisible dim,
+    "data" to the largest remaining divisible dim.
+
+``mesh`` only needs ``.axis_names`` and ``.devices.shape`` (the dry-run
+passes a lightweight stand-in, not a real ``jax.sharding.Mesh``).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _place(shape, axis_size: int, taken: set[int]) -> int | None:
+    """Largest dim (not yet taken) divisible by axis_size; None if none."""
+    order = sorted(range(len(shape)), key=lambda d: -shape[d])
+    for d in order:
+        if d in taken or shape[d] <= 1:
+            continue
+        if shape[d] % axis_size == 0:
+            return d
+    return None
+
+
+def param_partition_spec(path, leaf, mesh) -> P:
+    """Greedy TP+FSDP rule for one parameter leaf.
+
+    "model" shards the largest divisible dimension (tensor parallelism),
+    "data" the largest remaining divisible dimension (FSDP).  Dims of size
+    <= 1 and indivisible dims stay replicated.  ``path`` is accepted for
+    rule refinements but the base rule is shape-only.
+    """
+    shape = leaf.shape
+    if len(shape) == 0:
+        return P()
+    sizes = _axis_sizes(mesh)
+    spec: list = [None] * len(shape)
+    taken: set[int] = set()
+    for axis in ("model", "data"):
+        if axis not in sizes:
+            continue
+        d = _place(shape, sizes[axis], taken)
+        if d is not None:
+            spec[d] = axis
+            taken.add(d)
+    return P(*spec)
+
+
+def params_shardings(params, mesh):
+    """Tree of NamedShardings matching ``params`` (specs or real arrays)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_partition_spec(path, leaf, mesh)), params)
+
+
+def _batch_entry(mesh, batch: int):
+    """Batch-dim entry: largest ("pod","data") combination dividing batch."""
+    sizes = _axis_sizes(mesh)
+    axes = tuple(a for a in ("pod", "data") if a in sizes)
+    while axes and batch % math.prod(sizes[a] for a in axes) != 0:
+        axes = axes[1:]
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def batch_partition_spec(mesh, batch: int, ndim: int) -> P:
+    """Shard the leading (batch) dim over the data-like axes; rest replicated."""
+    return P(_batch_entry(mesh, batch), *([None] * (ndim - 1)))
+
+
+def cache_partition_spec(mesh, leaf, batch: int) -> P:
+    """Decode-cache rule: shard the batch dimension (caches are stacked over
+    pattern repeats, so batch is the first dim of size ``batch``)."""
+    spec: list = [None] * leaf.ndim
+    for d, size in enumerate(leaf.shape):
+        if size == batch:
+            spec[d] = _batch_entry(mesh, batch)
+            break
+    return P(*spec)

@@ -1,7 +1,7 @@
 """jit'd wrappers bridging core StepTables to the Pallas kernels.
 
 The kernels operate on the *round-major* layout (see hbmc_trisolve.py).
-``RoundMajorTables.from_steps`` converts a host-side ``StepTables`` once at
+``DeviceRoundMajorTables.from_steps`` converts a host-side ``StepTables`` once at
 setup; ``apply`` runs one triangular solve and returns the result in the
 original (HBMC) index space.
 """
@@ -13,14 +13,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sell
 from repro.core.sell import StepTables
-from .hbmc_trisolve import hbmc_trisolve
-from .ref import hbmc_trisolve_ref
+from .hbmc_trisolve import hbmc_trisolve, hbmc_trisolve_batched
+from .ref import hbmc_trisolve_batched_ref, hbmc_trisolve_ref
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
-class RoundMajorTables:
+class DeviceRoundMajorTables:
+    """Device-resident round-major tables (see core.sell.RoundMajorTables
+    for the layout contract; this class only moves them to device and runs
+    the kernels)."""
     cols: jax.Array    # (S, R, K) int32, round-major coords
     vals: jax.Array    # (S, R, K)
     dinv: jax.Array    # (S, R)
@@ -35,26 +39,21 @@ class RoundMajorTables:
         return cls(*children, n_slots=aux[0])
 
     @classmethod
-    def from_steps(cls, t: StepTables, dtype=jnp.float64) -> "RoundMajorTables":
-        s_, r_ = t.rows.shape
-        k_ = t.cols.shape[-1]
-        # position map: HBMC index -> round-major position (unassigned -> S*R,
-        # which jnp.take(fill_value=0) turns into a harmless 0 read)
-        pos = np.full(t.n_slots, s_ * r_, dtype=np.int64)
-        lane = np.arange(s_ * r_).reshape(s_, r_)
-        live_mask = t.rows != (t.n_slots - 1)
-        pos[t.rows[live_mask]] = lane[live_mask]
-        cols_rm = pos[t.cols].astype(np.int32)
-        return cls(cols=jnp.asarray(cols_rm),
-                   vals=jnp.asarray(t.vals, dtype=dtype),
-                   dinv=jnp.asarray(t.dinv, dtype=dtype),
-                   rows=jnp.asarray(t.rows.astype(np.int32)),
-                   n_slots=t.n_slots)
+    def from_host(cls, h: sell.RoundMajorTables,
+                  dtype=jnp.float64) -> "DeviceRoundMajorTables":
+        return cls(cols=jnp.asarray(h.cols),
+                   vals=jnp.asarray(h.vals, dtype=dtype),
+                   dinv=jnp.asarray(h.dinv, dtype=dtype),
+                   rows=jnp.asarray(h.rows),
+                   n_slots=h.n_slots)
+
+    @classmethod
+    def from_steps(cls, t: StepTables, dtype=jnp.float64) -> "DeviceRoundMajorTables":
+        return cls.from_host(sell.to_round_major(t), dtype=dtype)
 
     def apply(self, q: jax.Array, *, use_kernel: bool = True,
               interpret: bool = True) -> jax.Array:
         """One triangular solve.  q, result: (n_slots-1,) in HBMC order."""
-        s_, r_ = self.dinv.shape
         qp = jnp.concatenate([q, jnp.zeros((1,), dtype=q.dtype)])
         q_rm = qp[self.rows]                         # (S, R)
         if use_kernel:
@@ -66,12 +65,28 @@ class RoundMajorTables:
         y = y.at[self.rows.reshape(-1)].set(y_rm)    # pad lanes hit slot -1
         return y[:-1]
 
+    def apply_batched(self, q: jax.Array, *, use_kernel: bool = True,
+                      interpret: bool = True) -> jax.Array:
+        """Multi-RHS triangular solve.  q, result: (n_slots-1, B)."""
+        qp = jnp.concatenate(
+            [q, jnp.zeros((1, q.shape[1]), dtype=q.dtype)], axis=0)
+        q_rm = qp[self.rows]                         # (S, R, B)
+        if use_kernel:
+            y_rm = hbmc_trisolve_batched(self.cols, self.vals, self.dinv,
+                                         q_rm, interpret=interpret)
+        else:
+            y_rm = hbmc_trisolve_batched_ref(self.cols, self.vals, self.dinv,
+                                             q_rm)
+        y = jnp.zeros((self.n_slots, q.shape[1]), dtype=q.dtype)
+        y = y.at[self.rows.reshape(-1)].set(y_rm)
+        return y[:-1]
+
 
 @dataclasses.dataclass(frozen=True)
 class KernelPreconditioner:
     """IC(0) apply (L L^T)^{-1} using the Pallas kernels end to end."""
-    fwd: RoundMajorTables
-    bwd: RoundMajorTables
+    fwd: DeviceRoundMajorTables
+    bwd: DeviceRoundMajorTables
     use_kernel: bool = True
     interpret: bool = True
 
@@ -81,11 +96,18 @@ class KernelPreconditioner:
         return self.bwd.apply(y, use_kernel=self.use_kernel,
                               interpret=self.interpret)
 
+    def apply_batched(self, r: jax.Array) -> jax.Array:
+        """Multi-RHS apply: r (n, B) -> (n, B)."""
+        y = self.fwd.apply_batched(r, use_kernel=self.use_kernel,
+                                   interpret=self.interpret)
+        return self.bwd.apply_batched(y, use_kernel=self.use_kernel,
+                                      interpret=self.interpret)
+
 
 def build_kernel_preconditioner(fwd: StepTables, bwd: StepTables,
                                 dtype=jnp.float64, use_kernel: bool = True,
                                 interpret: bool = True) -> KernelPreconditioner:
     return KernelPreconditioner(
-        fwd=RoundMajorTables.from_steps(fwd, dtype=dtype),
-        bwd=RoundMajorTables.from_steps(bwd, dtype=dtype),
+        fwd=DeviceRoundMajorTables.from_steps(fwd, dtype=dtype),
+        bwd=DeviceRoundMajorTables.from_steps(bwd, dtype=dtype),
         use_kernel=use_kernel, interpret=interpret)

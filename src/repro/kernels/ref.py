@@ -20,6 +20,22 @@ def hbmc_trisolve_ref(cols: jax.Array, vals: jax.Array, dinv: jax.Array,
     return jax.lax.fori_loop(0, s_, body, y0)
 
 
+def hbmc_trisolve_batched_ref(cols: jax.Array, vals: jax.Array,
+                              dinv: jax.Array, q: jax.Array) -> jax.Array:
+    """Multi-RHS round-major triangular solve.  q: (S, R, B) -> (S*R, B)."""
+    s_, r_, k_ = cols.shape
+    b_ = q.shape[-1]
+    y0 = jnp.zeros((s_ * r_, b_), dtype=vals.dtype)
+
+    def body(s, y):
+        g = jnp.take(y, cols[s], axis=0, fill_value=0)     # (R, K, B)
+        acc = jnp.sum(vals[s][..., None] * g, axis=1)      # (R, B)
+        t = (q[s] - acc) * dinv[s][:, None]
+        return jax.lax.dynamic_update_slice(y, t, (s * r_, 0))
+
+    return jax.lax.fori_loop(0, s_, body, y0)
+
+
 def sell_spmv_ref(vals: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
     """SELL-w SpMV oracle.  vals/cols: (n_slices, K, w); x: (n,)."""
     g = jnp.take(x, cols, axis=0, fill_value=0)            # (S, K, w)

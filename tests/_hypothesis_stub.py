@@ -1,0 +1,28 @@
+"""Skip-stubs standing in for ``hypothesis`` when it is not installed.
+
+``given`` replaces the test with a zero-arg function that skips (so pytest
+never looks for fixtures matching the strategy kwargs), ``settings`` is the
+identity, and ``st`` accepts any strategy construction at decoration time.
+"""
+import pytest
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        def skipped():
+            pytest.skip("hypothesis not installed")
+        skipped.__name__ = fn.__name__
+        return skipped
+    return deco
+
+
+def settings(*args, **kwargs):
+    return lambda fn: fn
+
+
+class _StrategyStub:
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+st = _StrategyStub()

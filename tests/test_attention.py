@@ -6,7 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # optional dep: only the property sweeps need it
+    from _hypothesis_stub import given, settings, st
 
 from repro.models.layers import decode_attention, flash_attention
 

@@ -1,0 +1,211 @@
+"""Backend parity (xla vs pallas) and batched multi-RHS PCG.
+
+The Pallas round-major kernel is validated against the XLA substitution as
+oracle (same semantics, different layout), and the batched PCG front-end is
+validated against B independent single-RHS solves — iteration for
+iteration, which is the acceptance bar for per-RHS convergence masking.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (block_multicolor_ordering, build_preconditioner,
+                        hbmc_from_bmc, ic0, pack_factor_hbmc, pad_system_hbmc,
+                        pcg_batched, solve_iccg, solve_iccg_batched,
+                        spmv_ell_batched, to_round_major)
+from repro.core.matrices import laplace_2d, laplace_3d
+from repro.core.sell import pack_ell
+from repro.core.trisolve import (backward_solve, backward_solve_batched,
+                                 forward_solve, forward_solve_batched)
+from repro.kernels.ops import DeviceRoundMajorTables
+
+
+MATRICES = [
+    ("lap2d", laplace_2d(14, 12)),
+    ("lap3d", laplace_3d(5, 5, 4)),
+]
+
+
+def _hbmc_tables(a, bs=8, w=4):
+    bmc = block_multicolor_ordering(a, bs)
+    hb = hbmc_from_bmc(bmc, w)
+    a_hb, _ = pad_system_hbmc(a, None, hb)
+    l = ic0(a_hb)
+    return hb, l, pack_factor_hbmc(l, hb)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs XLA forward/backward substitution (f64 oracle).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,a", MATRICES)
+def test_pallas_trisolve_matches_xla_solves(name, a):
+    from repro.core.trisolve import DeviceTables
+    hb, l, (fwd_h, bwd_h) = _hbmc_tables(a)
+    fwd = DeviceTables.from_host(fwd_h)
+    bwd = DeviceTables.from_host(bwd_h)
+    fwd_rm = DeviceRoundMajorTables.from_steps(fwd_h)
+    bwd_rm = DeviceRoundMajorTables.from_steps(bwd_h)
+
+    q = jnp.asarray(np.random.default_rng(0).normal(size=hb.n_final))
+    y_x = np.asarray(forward_solve(fwd, q))
+    y_p = np.asarray(fwd_rm.apply(q, use_kernel=True, interpret=True))
+    real = ~hb.is_dummy
+    np.testing.assert_allclose(y_p[real], y_x[real], rtol=1e-12, atol=1e-12)
+
+    z_x = np.asarray(backward_solve(bwd, jnp.asarray(y_x)))
+    z_p = np.asarray(bwd_rm.apply(jnp.asarray(y_x), use_kernel=True,
+                                  interpret=True))
+    np.testing.assert_allclose(z_p[real], z_x[real], rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("name,a", MATRICES)
+def test_preconditioner_backend_parity(name, a):
+    hb, l, _ = _hbmc_tables(a)
+    pre_x = build_preconditioner(l, hb, backend="xla")
+    pre_p = build_preconditioner(l, hb, backend="pallas")
+    r = jnp.asarray(np.random.default_rng(1).normal(size=hb.n_final))
+    z_x = np.asarray(pre_x(r))
+    z_p = np.asarray(pre_p(r))
+    real = ~hb.is_dummy
+    np.testing.assert_allclose(z_p[real], z_x[real], rtol=1e-12, atol=1e-12)
+
+
+def test_unknown_backend_rejected():
+    a = laplace_2d(8, 8)
+    hb, l, _ = _hbmc_tables(a, bs=4, w=2)
+    with pytest.raises(ValueError, match="backend"):
+        build_preconditioner(l, hb, backend="cuda")
+
+
+# ---------------------------------------------------------------------------
+# Round-major repacking invariants.
+# ---------------------------------------------------------------------------
+
+def test_round_major_layout_contract():
+    a = laplace_2d(12, 10)
+    hb, l, (fwd_h, _) = _hbmc_tables(a)
+    rm = to_round_major(fwd_h)
+    s_, r_ = fwd_h.rows.shape
+    # the kept permutation (rows) covers every live unknown exactly once
+    live = rm.rows[rm.rows != rm.n_slots - 1]
+    assert len(np.unique(live)) == len(live)
+    # every non-pad column entry points strictly at an EARLIER round-major
+    # position (lower-triangular in execution order)
+    pos = np.arange(s_ * r_).reshape(s_, r_)
+    valid = rm.vals != 0.0
+    assert (rm.cols[valid] < pos[..., None].repeat(rm.cols.shape[-1],
+                                                   axis=-1)[valid]).all()
+    # values/dinv are carried through unchanged
+    np.testing.assert_array_equal(rm.vals, fwd_h.vals)
+    np.testing.assert_array_equal(rm.dinv, fwd_h.dinv)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: same PCG iteration counts across backends (acceptance).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,a", MATRICES)
+def test_solve_iccg_backend_same_iterations(name, a):
+    b = np.random.default_rng(2).normal(size=a.shape[0])
+    r_x = solve_iccg(a, b, method="hbmc", block_size=8, w=4, backend="xla")
+    r_p = solve_iccg(a, b, method="hbmc", block_size=8, w=4,
+                     backend="pallas")
+    assert r_x.result.iterations == r_p.result.iterations, name
+    assert r_p.result.converged
+    np.testing.assert_allclose(r_p.x, r_x.x, rtol=1e-9, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-RHS solves.
+# ---------------------------------------------------------------------------
+
+def test_batched_trisolve_matches_columnwise():
+    from repro.core.trisolve import DeviceTables
+    a = laplace_2d(13, 9)
+    hb, l, (fwd_h, bwd_h) = _hbmc_tables(a)
+    fwd = DeviceTables.from_host(fwd_h)
+    bwd = DeviceTables.from_host(bwd_h)
+    q = jnp.asarray(np.random.default_rng(3).normal(size=(hb.n_final, 4)))
+    yb = np.asarray(forward_solve_batched(fwd, q))
+    zb = np.asarray(backward_solve_batched(bwd, jnp.asarray(yb)))
+    for j in range(q.shape[1]):
+        yj = np.asarray(forward_solve(fwd, q[:, j]))
+        np.testing.assert_allclose(yb[:, j], yj, rtol=1e-13, atol=1e-13)
+        zj = np.asarray(backward_solve(bwd, jnp.asarray(yj)))
+        np.testing.assert_allclose(zb[:, j], zj, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_batched_pallas_kernel_matches_single(dtype):
+    a = laplace_2d(11, 8)
+    hb, l, (fwd_h, _) = _hbmc_tables(a, bs=4, w=4)
+    rm = DeviceRoundMajorTables.from_steps(fwd_h, dtype=dtype)
+    q = jnp.asarray(np.random.default_rng(4).normal(size=(hb.n_final, 3)),
+                    dtype=dtype)
+    yb = np.asarray(rm.apply_batched(q, use_kernel=True, interpret=True))
+    yb_ref = np.asarray(rm.apply_batched(q, use_kernel=False))
+    np.testing.assert_array_equal(yb, yb_ref)
+    for j in range(q.shape[1]):
+        yj = np.asarray(rm.apply(q[:, j], use_kernel=True, interpret=True))
+        tol = 1e-5 if dtype == jnp.float32 else 1e-12
+        np.testing.assert_allclose(yb[:, j], yj, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_batched_pcg_matches_singles_iteration_for_iteration(backend):
+    """Acceptance: every RHS of a batched solve converges, with the same
+    per-RHS iteration count as B independent single-RHS solves."""
+    a = laplace_2d(16, 14)
+    rng = np.random.default_rng(5)
+    B = 6
+    bb = rng.normal(size=(a.shape[0], B))
+    bb[:, 2] *= 1e3          # scale spread exercises per-RHS masking
+    bb[:, 4] *= 1e-3
+    rb = solve_iccg_batched(a, bb, method="hbmc", block_size=8, w=4,
+                            backend=backend)
+    assert rb.result.converged.all()
+    singles = [solve_iccg(a, bb[:, j], method="hbmc", block_size=8, w=4,
+                          backend=backend).result.iterations
+               for j in range(B)]
+    np.testing.assert_array_equal(rb.result.iterations, singles)
+    # masking means the loop ran exactly max(iterations) steps
+    assert rb.result.n_steps == max(singles)
+    for j in range(B):
+        err = (np.linalg.norm(a @ rb.x[:, j] - bb[:, j])
+               / np.linalg.norm(bb[:, j]))
+        assert err < 1e-6, (j, err)
+
+
+def test_batched_pcg_zero_rhs_column():
+    """An all-zero RHS column must converge instantly (0 iterations) and
+    not poison the other columns."""
+    a = laplace_2d(10, 10)
+    bb = np.random.default_rng(6).normal(size=(a.shape[0], 3))
+    bb[:, 1] = 0.0
+    rb = solve_iccg_batched(a, bb, method="hbmc", block_size=4, w=4)
+    assert rb.result.converged.all()
+    assert rb.result.iterations[1] == 0
+    np.testing.assert_array_equal(rb.x[:, 1], 0.0)
+    assert rb.result.iterations[0] > 0 and rb.result.iterations[2] > 0
+
+
+def test_pcg_batched_direct_api():
+    """pcg_batched with hand-built operators (no solver front-end)."""
+    a = laplace_2d(9, 9)
+    hb, l, (fwd_h, bwd_h) = _hbmc_tables(a, bs=4, w=2)
+    a_hb, _ = pad_system_hbmc(a, None, hb)
+    pre = build_preconditioner(l, hb)
+    cols_h, vals_h = pack_ell(a_hb)
+    vals, cols = jnp.asarray(vals_h), jnp.asarray(cols_h)
+    bb = np.zeros((hb.n_final, 2))
+    src = np.random.default_rng(7).normal(size=(a.shape[0], 2))
+    bb[hb.perm] = src
+    res = pcg_batched(lambda x: spmv_ell_batched(vals, cols, x),
+                      pre.apply_batched, jnp.asarray(bb))
+    assert res.converged.all()
+    x = res.x[hb.perm]
+    for j in range(2):
+        err = (np.linalg.norm(a @ x[:, j] - src[:, j])
+               / np.linalg.norm(src[:, j]))
+        assert err < 1e-6

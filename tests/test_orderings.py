@@ -2,7 +2,11 @@
 import numpy as np
 import pytest
 import scipy.sparse as sp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # optional dep: only the property sweeps need it
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import (block_multicolor_ordering, check_er_condition,
                         hbmc_from_bmc, multicolor_ordering,
