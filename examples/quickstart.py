@@ -30,7 +30,7 @@ def main():
           "round for the TPU VPU.")
 
     # --- backend switch: the same solve through the Pallas kernel ---------
-    # (interpret mode off-TPU; pass interpret=False on real hardware)
+    # (interpret auto-resolves: compiled on TPU, interpreted elsewhere)
     rep_p = solve_iccg(a, b, method="hbmc", block_size=16, w=8,
                        backend="pallas")
     print(f"\npallas backend: {rep_p.result.iterations} iterations "

@@ -8,15 +8,20 @@ from .ic0 import ic0, ic0_error, sequential_ic_solve
 from .iccg import (BatchedPCGResult, PCGResult, pcg, pcg_batched, spmv_ell,
                    spmv_ell_batched, spmv_sell, spmv_sell_batched)
 from .matrices import PAPER_PROBLEMS, PAPER_SHIFTS, paper_problem
-from .sell import (RoundMajorTables, SellMatrix, StepTables, pack_ell,
+from .sell import (FusedRoundMajorTables, RoundMajorLayout, RoundMajorTables,
+                   SellMatrix, StepTables, fuse_round_major, pack_ell,
                    pack_factor, pack_factor_hbmc, pack_sell, pack_steps,
-                   rounds_bmc, rounds_hbmc, rounds_mc, rounds_natural,
-                   to_round_major)
+                   permute_round_major, round_major_layout, rounds_bmc,
+                   rounds_hbmc, rounds_mc, rounds_natural, to_round_major)
 from .smoothers import GSSmoother, build_gs_smoother, gs_solve
 from .solvers import (BatchedICCGReport, ICCGReport, solve_iccg,
                       solve_iccg_batched)
-from .trisolve import (BACKENDS, DeviceTables, HBMCPreconditioner,
+from .trisolve import (BACKENDS, LAYOUTS, DeviceFusedTables, DeviceTables,
+                       HBMCPreconditioner, RoundMajorPreconditioner,
                        backward_solve, backward_solve_batched,
                        build_preconditioner, build_preconditioner_from_rounds,
-                       forward_solve, forward_solve_batched,
-                       sequential_backward, sequential_forward)
+                       build_round_major_preconditioner,
+                       build_round_major_preconditioner_from_rounds,
+                       forward_solve, forward_solve_batched, fused_solve,
+                       fused_solve_batched, sequential_backward,
+                       sequential_forward)

@@ -189,6 +189,7 @@ def pad_system(a: sp.spmatrix, b: np.ndarray | None, ordering: BMCOrdering
     a_bar = sp.coo_matrix((data, (rows, cols)), shape=(npad, npad)).tocsr()
     b_bar = None
     if b is not None:
-        b_bar = np.zeros(npad, dtype=np.float64)
-        b_bar[p] = np.asarray(b, dtype=np.float64)
+        b = np.asarray(b)          # keep the caller's dtype (f32 stays f32)
+        b_bar = np.zeros(npad, dtype=b.dtype)
+        b_bar[p] = b
     return a_bar, b_bar

@@ -75,17 +75,20 @@ def pcg(spmv: Callable[[jax.Array], jax.Array],
     z0 = precond(r0)
     p0 = z0
     rz0 = jnp.vdot(r0, z0)
+    # carry ||r|| in the loop state: one full-vector reduction per step
+    # (cond reads the carried value instead of recomputing the norm)
+    rnorm0 = jnp.linalg.norm(r0)
     hist0 = (jnp.full((maxiter + 1,), jnp.nan, dtype=b.dtype)
              if record_history else jnp.zeros((0,), dtype=b.dtype))
     if record_history:
-        hist0 = hist0.at[0].set(jnp.linalg.norm(r0) / bnorm)
+        hist0 = hist0.at[0].set(rnorm0 / bnorm)
 
     def cond(state):
-        _, r, _, _, it, _ = state
-        return (jnp.linalg.norm(r) / bnorm >= rtol) & (it < maxiter)
+        _, _, _, _, rnorm, it, _ = state
+        return (rnorm / bnorm >= rtol) & (it < maxiter)
 
     def body(state):
-        x, r, p, rz, it, hist = state
+        x, r, p, rz, _, it, hist = state
         ap = spmv(p)
         alpha = rz / jnp.vdot(p, ap)
         x = x + alpha * p
@@ -95,13 +98,14 @@ def pcg(spmv: Callable[[jax.Array], jax.Array],
         beta = rz_new / rz
         p = z + beta * p
         it = it + 1
+        rnorm = jnp.linalg.norm(r)
         if record_history:
-            hist = hist.at[it].set(jnp.linalg.norm(r) / bnorm)
-        return (x, r, p, rz_new, it, hist)
+            hist = hist.at[it].set(rnorm / bnorm)
+        return (x, r, p, rz_new, rnorm, it, hist)
 
-    state = (x0, r0, p0, rz0, jnp.asarray(0), hist0)
-    x, r, _, _, it, hist = jax.lax.while_loop(cond, body, state)
-    relres = float(jnp.linalg.norm(r) / bnorm)
+    state = (x0, r0, p0, rz0, rnorm0, jnp.asarray(0), hist0)
+    x, r, _, _, rnorm, it, hist = jax.lax.while_loop(cond, body, state)
+    relres = float(rnorm / bnorm)
     return PCGResult(x=np.asarray(x), iterations=int(it), relres=relres,
                      converged=relres < rtol, history=np.asarray(hist))
 

@@ -165,6 +165,68 @@ def pack_factor_hbmc(l_final: sp.csr_matrix, ordering: HBMCOrdering
 # ----------------------------------------------------------------------
 
 @dataclasses.dataclass
+class RoundMajorLayout:
+    """The HBMC-index <-> round-major-position bijection (live lanes only).
+
+    Round-major is the execution-order coordinate system: lane ``t`` of
+    forward round ``s`` lives at position ``s * R + t`` of a dense ``(S*R,)``
+    vector.  Pad lanes (``rows == n_slots - 1``) are *holes*: they hold exact
+    zeros for the whole PCG loop and have no HBMC counterpart.
+
+    This object is the ONLY place permutations live in the round-major-native
+    solver path: ``embed`` maps the right-hand side in once per solve,
+    ``extract`` maps the solution out once per solve.  Everything in between
+    (SpMV, both triangular sweeps, all PCG state) stays in round-major
+    coordinates.
+    """
+    rows: np.ndarray   # (S, R) int32 — HBMC index per position (pad -> n_slots-1)
+    pos: np.ndarray    # (n_slots,) int64 — HBMC index -> position (none -> S*R)
+    n_slots: int
+
+    @property
+    def n_steps(self) -> int:
+        return self.rows.shape[0]
+
+    @property
+    def lanes(self) -> int:
+        return self.rows.shape[1]
+
+    @property
+    def m(self) -> int:
+        """Padded round-major dimension S*R."""
+        return self.rows.size
+
+    def embed(self, v: np.ndarray) -> np.ndarray:
+        """HBMC-ordered (n,) or (n, B) -> round-major (m,) / (m, B), holes 0."""
+        v = np.asarray(v)
+        flat = self.rows.reshape(-1)
+        live = flat != self.n_slots - 1
+        out = np.zeros((self.m,) + v.shape[1:], dtype=v.dtype)
+        out[live] = v[flat[live]]
+        return out
+
+    def extract(self, y: np.ndarray) -> np.ndarray:
+        """Round-major (m,) or (m, B) -> HBMC-ordered (n,) / (n, B)."""
+        y = np.asarray(y)
+        flat = self.rows.reshape(-1)
+        live = flat != self.n_slots - 1
+        out = np.zeros((self.n_slots - 1,) + y.shape[1:], dtype=y.dtype)
+        out[flat[live]] = y[live]
+        return out
+
+
+def round_major_layout(t: StepTables) -> RoundMajorLayout:
+    """Layout induced by the forward StepTables (execution order)."""
+    s_, r_ = t.rows.shape
+    pos = np.full(t.n_slots, s_ * r_, dtype=np.int64)
+    lane = np.arange(s_ * r_).reshape(s_, r_)
+    live = t.rows != (t.n_slots - 1)
+    pos[t.rows[live]] = lane[live]
+    return RoundMajorLayout(rows=t.rows.astype(np.int32), pos=pos,
+                            n_slots=t.n_slots)
+
+
+@dataclasses.dataclass
 class RoundMajorTables:
     """StepTables re-indexed into the dense *round-major* coordinate system.
 
@@ -200,15 +262,93 @@ def to_round_major(t: StepTables) -> RoundMajorTables:
     the kernel reads them via ``jnp.take(..., fill_value=0)`` so the
     out-of-range position contributes ``0 * 0``.
     """
-    s_, r_ = t.rows.shape
-    pos = np.full(t.n_slots, s_ * r_, dtype=np.int64)
-    lane = np.arange(s_ * r_).reshape(s_, r_)
-    live_mask = t.rows != (t.n_slots - 1)
-    pos[t.rows[live_mask]] = lane[live_mask]
-    return RoundMajorTables(cols=pos[t.cols].astype(np.int32),
+    lay = round_major_layout(t)
+    return RoundMajorTables(cols=lay.pos[t.cols].astype(np.int32),
                             vals=t.vals, dinv=t.dinv,
-                            rows=t.rows.astype(np.int32),
-                            n_slots=t.n_slots)
+                            rows=lay.rows, n_slots=t.n_slots)
+
+
+@dataclasses.dataclass
+class FusedRoundMajorTables:
+    """Forward AND backward sweeps packed for one fused 2S-step solve.
+
+    The backward rounds are exactly the forward rounds reversed (``rounds_*``
+    build them that way, lane order included), so in *forward* round-major
+    coordinates the backward sweep's round ``s'`` writes the contiguous slice
+    ``[(S-1-s')*R, (S-s')*R)`` — a dense store, same as the forward sweep.
+    That makes one solution buffer sufficient: the forward half fills it with
+    ``y = L^{-1} q`` slice by slice, the backward half overwrites it in place
+    with ``z = L^{-T} y`` in reverse slice order.  Every value the backward
+    gather touches is either already overwritten (a ``z`` entry from a later
+    forward round — exactly its dependencies) or the current slice's ``y``
+    read before the store.
+
+    Step ``g`` of the fused schedule uses table row ``g``: rows ``0..S-1``
+    are the forward rounds, rows ``S..2S-1`` the backward rounds in backward
+    execution order.  ``cols`` of BOTH halves are forward round-major gather
+    positions (missing -> ``m``, read via ``fill_value=0`` against zero
+    ``vals``).
+    """
+    cols: np.ndarray   # (2S, R, K) int32 — fwd-round-major gather positions
+    vals: np.ndarray   # (2S, R, K) f64
+    dinv: np.ndarray   # (2S, R) f64
+    layout: RoundMajorLayout
+
+    @property
+    def n_steps(self) -> int:
+        """Rounds per sweep (the fused grid has 2 * n_steps steps)."""
+        return self.layout.n_steps
+
+    @property
+    def shape(self):
+        return self.cols.shape
+
+
+def fuse_round_major(fwd: StepTables, bwd: StepTables) -> FusedRoundMajorTables:
+    """Pack forward + backward StepTables into the fused round-major form."""
+    if fwd.rows.shape != bwd.rows.shape or fwd.n_slots != bwd.n_slots:
+        raise ValueError("forward/backward tables disagree on round shape")
+    if not np.array_equal(bwd.rows[::-1], fwd.rows):
+        raise ValueError("backward rounds must be the reversed forward "
+                         "rounds (lane order included)")
+    lay = round_major_layout(fwd)
+    m = lay.m
+    k = max(fwd.cols.shape[-1], bwd.cols.shape[-1])
+
+    def half(t: StepTables) -> tuple[np.ndarray, np.ndarray]:
+        s_, r_, kt = t.cols.shape
+        cols = np.full((s_, r_, k), m, dtype=np.int32)
+        vals = np.zeros((s_, r_, k), dtype=t.vals.dtype)
+        cols[:, :, :kt] = lay.pos[t.cols]
+        vals[:, :, :kt] = t.vals
+        return cols, vals
+
+    fc, fv = half(fwd)
+    bc, bv = half(bwd)
+    return FusedRoundMajorTables(
+        cols=np.concatenate([fc, bc], axis=0),
+        vals=np.concatenate([fv, bv], axis=0),
+        dinv=np.concatenate([fwd.dinv, bwd.dinv], axis=0),
+        layout=lay)
+
+
+def permute_round_major(a: sp.spmatrix, layout: RoundMajorLayout
+                        ) -> sp.csr_matrix:
+    """Re-index a matrix from HBMC order into round-major positions (m x m).
+
+    Rows/columns of unknowns without a round-major position (dummy padding,
+    dropped from the rounds) are removed: their PCG state is identically
+    zero in both layouts, so the Krylov process is unchanged.  Hole
+    positions become empty rows, so SpMV writes exact zeros there and the
+    round-major state vectors keep their holes at zero.
+    """
+    coo = sp.coo_matrix(a)
+    m = layout.m
+    rows = layout.pos[coo.row]
+    cols = layout.pos[coo.col]
+    live = (rows < m) & (cols < m)
+    return sp.coo_matrix((coo.data[live], (rows[live], cols[live])),
+                         shape=(m, m)).tocsr()
 
 
 # ----------------------------------------------------------------------

@@ -1,10 +1,19 @@
 """End-to-end parallel ICCG solvers: MC / BMC / HBMC (paper §5 solvers).
 
-``solve_iccg(a, b, method=..., backend=...)`` performs the full pipeline:
-ordering -> permuted (padded) system -> shifted IC(0) -> step packing ->
-device PCG -> solution mapped back to the original order.  ``backend``
-picks the triangular-solve implementation ("xla" fori_loop substitution or
-the "pallas" round-major kernel).
+``solve_iccg(a, b, method=..., backend=..., layout=...)`` performs the full
+pipeline: ordering -> permuted (padded) system -> shifted IC(0) -> step
+packing -> device PCG -> solution mapped back to the original order.
+``backend`` picks the triangular-solve implementation ("xla" substitution
+or the Pallas kernel); ``layout`` picks the coordinate system of the PCG
+loop:
+
+  * ``"round_major"`` (default) — the WHOLE loop (SpMV operands, both
+    triangular sweeps, all PCG state) lives in execution-order round-major
+    coordinates.  Permutation happens exactly twice per solve (b in, x
+    out); the preconditioner is one fused fwd+bwd pass.
+  * ``"index"`` — the pre-refactor path: state in permuted-matrix index
+    order, the solve layout re-gathered/scattered on every apply.  Kept as
+    the benchmark baseline and for the sharded path (core/partition.py).
 
 ``solve_iccg_batched(a, b2d, ...)`` is the multi-RHS front-end: all B
 right-hand sides advance through ONE device while_loop with per-RHS
@@ -26,7 +35,8 @@ from .hbmc import hbmc_from_bmc, pad_system_hbmc
 from .ic0 import ic0
 from .iccg import (BatchedPCGResult, PCGResult, pcg, pcg_batched, spmv_ell,
                    spmv_ell_batched, spmv_sell, spmv_sell_batched)
-from .trisolve import build_preconditioner_from_rounds
+from .trisolve import (LAYOUTS, build_preconditioner_from_rounds,
+                       build_round_major_preconditioner_from_rounds)
 
 
 @dataclasses.dataclass
@@ -42,6 +52,7 @@ class ICCGReport:
     lane_occupancy: float   # mean live lanes / padded lanes per round
     x: np.ndarray           # solution in ORIGINAL ordering
     backend: str = "xla"
+    layout: str = "round_major"
 
 
 @dataclasses.dataclass
@@ -57,6 +68,7 @@ class BatchedICCGReport:
     lane_occupancy: float
     x: np.ndarray           # (n, B) solutions in ORIGINAL ordering
     backend: str = "xla"
+    layout: str = "round_major"
 
 
 @dataclasses.dataclass
@@ -118,74 +130,104 @@ def _build_spmv(a_bar, spmv_format: str, w: int, dtype, batched: bool):
     return lambda x: spmv_ell(vals, cols, x)
 
 
+def _build_operators(sysd: _System, shift: float, spmv_format: str, w: int,
+                     dtype, backend: str, interpret: bool | None,
+                     layout: str, batched: bool):
+    """IC(0) + preconditioner + SpMV in the requested layout.
+
+    Returns ``(precond, spmv_fn, rm_layout)``: the preconditioner object
+    (callable for single RHS, ``.apply_batched`` for multi-RHS) and, for
+    layout "round_major", the b-in/x-out permutation pair (None for the
+    index-space path).  ``batched`` selects the SpMV variant only.
+    """
+    if layout not in LAYOUTS:
+        raise ValueError(f"unknown layout {layout!r}; expected one of "
+                         f"{LAYOUTS}")
+    l_bar = ic0(sysd.a_bar, shift=shift)
+    if layout == "round_major":
+        precond, rm = build_round_major_preconditioner_from_rounds(
+            l_bar, sysd.fwd_rounds, sysd.bwd_rounds, drop_mask=sysd.drop,
+            dtype=dtype, backend=backend, interpret=interpret)
+        a_op = sell.permute_round_major(sysd.a_bar, rm)
+    else:
+        precond, rm = build_preconditioner_from_rounds(
+            l_bar, sysd.fwd_rounds, sysd.bwd_rounds, drop_mask=sysd.drop,
+            dtype=dtype, backend=backend, interpret=interpret), None
+        a_op = sysd.a_bar
+    spmv = _build_spmv(a_op, spmv_format, w, dtype, batched=batched)
+    return precond, spmv, rm
+
+
 def solve_iccg(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
                block_size: int = 32, w: int = 8, shift: float = 0.0,
                rtol: float = 1e-7, maxiter: int = 10_000,
                spmv_format: str = "ell", dtype=jnp.float64,
                record_history: bool = False, backend: str = "xla",
-               interpret: bool = True) -> ICCGReport:
+               interpret: bool | None = None,
+               layout: str = "round_major") -> ICCGReport:
     a = sp.csr_matrix(a)
-    b = np.asarray(b, dtype=np.float64)
+    b = np.asarray(b, dtype=np.dtype(jnp.dtype(dtype)))
     t0 = time.perf_counter()
 
     sysd = _order_system(a, b, method, block_size, w)
-    l_bar = ic0(sysd.a_bar, shift=shift)
-    precond = build_preconditioner_from_rounds(
-        l_bar, sysd.fwd_rounds, sysd.bwd_rounds, drop_mask=sysd.drop,
-        dtype=dtype, backend=backend, interpret=interpret)
-    spmv = _build_spmv(sysd.a_bar, spmv_format, w, dtype, batched=False)
+    precond, spmv, rm = _build_operators(
+        sysd, shift, spmv_format, w, dtype, backend, interpret, layout,
+        batched=False)
 
-    b_dev = jnp.asarray(sysd.b_bar, dtype=dtype)
+    b_host = rm.embed(sysd.b_bar) if rm is not None else sysd.b_bar
+    b_dev = jnp.asarray(b_host, dtype=dtype)
     t1 = time.perf_counter()
     res = pcg(spmv, precond, b_dev, rtol=rtol, maxiter=maxiter,
               record_history=record_history)
     t2 = time.perf_counter()
 
-    x = np.asarray(res.x[sysd.perm])  # x_orig[i] = x_bar[perm[i]]
+    x_bar = rm.extract(res.x) if rm is not None else res.x
+    x = np.asarray(x_bar[sysd.perm])  # x_orig[i] = x_bar[perm[i]]
     return ICCGReport(
         method=method, result=res, n=sysd.n, n_padded=sysd.n_padded,
         n_colors=sysd.n_colors, n_rounds=precond.n_rounds,
         setup_seconds=t1 - t0, solve_seconds=t2 - t1,
         lane_occupancy=_occupancy_from_rounds(sysd.fwd_rounds, sysd.drop),
-        x=x, backend=backend)
+        x=x, backend=backend, layout=layout)
 
 
 def solve_iccg_batched(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
                        block_size: int = 32, w: int = 8, shift: float = 0.0,
                        rtol: float = 1e-7, maxiter: int = 10_000,
                        spmv_format: str = "ell", dtype=jnp.float64,
-                       backend: str = "xla",
-                       interpret: bool = True) -> BatchedICCGReport:
+                       backend: str = "xla", interpret: bool | None = None,
+                       layout: str = "round_major") -> BatchedICCGReport:
     """Solve A x_j = b_j for all columns of ``b`` ((n, B)) in one PCG loop."""
     a = sp.csr_matrix(a)
-    b = np.asarray(b, dtype=np.float64)
+    np_dtype = np.dtype(jnp.dtype(dtype))
+    b = np.asarray(b, dtype=np_dtype)
     if b.ndim != 2:
         raise ValueError(f"solve_iccg_batched expects b of shape (n, B), "
                          f"got {b.shape}")
     t0 = time.perf_counter()
 
     sysd = _order_system(a, None, method, block_size, w)
-    l_bar = ic0(sysd.a_bar, shift=shift)
-    precond = build_preconditioner_from_rounds(
-        l_bar, sysd.fwd_rounds, sysd.bwd_rounds, drop_mask=sysd.drop,
-        dtype=dtype, backend=backend, interpret=interpret)
-    spmv = _build_spmv(sysd.a_bar, spmv_format, w, dtype, batched=True)
+    precond, spmv, rm = _build_operators(
+        sysd, shift, spmv_format, w, dtype, backend, interpret, layout,
+        batched=True)
 
-    b_bar = np.zeros((sysd.n_padded, b.shape[1]))
+    b_bar = np.zeros((sysd.n_padded, b.shape[1]), dtype=np_dtype)
     b_bar[sysd.perm] = b                  # embed every RHS into padded order
-    b_dev = jnp.asarray(b_bar, dtype=dtype)
+    b_host = rm.embed(b_bar) if rm is not None else b_bar
+    b_dev = jnp.asarray(b_host, dtype=dtype)
     t1 = time.perf_counter()
     res = pcg_batched(spmv, precond.apply_batched, b_dev, rtol=rtol,
                       maxiter=maxiter)
     t2 = time.perf_counter()
 
-    x = np.asarray(res.x[sysd.perm])      # (n, B) back in original order
+    x_bar = rm.extract(res.x) if rm is not None else res.x
+    x = np.asarray(x_bar[sysd.perm])      # (n, B) back in original order
     return BatchedICCGReport(
         method=method, result=res, n=sysd.n, n_padded=sysd.n_padded,
         n_colors=sysd.n_colors, n_rounds=precond.n_rounds,
         setup_seconds=t1 - t0, solve_seconds=t2 - t1,
         lane_occupancy=_occupancy_from_rounds(sysd.fwd_rounds, sysd.drop),
-        x=x, backend=backend)
+        x=x, backend=backend, layout=layout)
 
 
 def _occupancy_from_rounds(rounds, drop) -> float:

@@ -12,10 +12,17 @@ Two device backends, selected by ``build_preconditioner(..., backend=...)``:
     Pallas kernel is validated against.
   * ``"pallas"`` — ``repro.kernels.hbmc_trisolve`` operating on the dense
     round-major repacking (``sell.to_round_major``), with explicit VMEM
-    blocking; contiguous stores instead of scatters.  Pass
-    ``interpret=False`` on real TPU hardware.
+    blocking; contiguous stores instead of scatters.  ``interpret``
+    defaults from the runtime (compiled on TPU, interpreted elsewhere).
 
-Both backends expose a multi-RHS path (``apply_batched``) consumed by the
+And two PCG-loop layouts:
+  * ``HBMCPreconditioner`` (``layout="index"``) applies in permuted-matrix
+    index space — the solve layout is re-gathered/scattered per apply.
+  * ``RoundMajorPreconditioner`` (``layout="round_major"``, the default
+    solver path) applies natively on round-major vectors with both sweeps
+    fused into one 2S-step pass; zero per-apply permutations.
+
+All variants expose a multi-RHS path (``apply_batched``) consumed by the
 batched PCG front-end (``iccg.pcg_batched``).
 """
 from __future__ import annotations
@@ -30,9 +37,11 @@ import numpy as np
 import scipy.sparse as sp
 
 from .hbmc import HBMCOrdering
-from .sell import StepTables, pack_factor_hbmc
+from .sell import (FusedRoundMajorTables, RoundMajorLayout, StepTables,
+                   fuse_round_major, pack_factor_hbmc)
 
 BACKENDS = ("xla", "pallas")
+LAYOUTS = ("round_major", "index")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -134,6 +143,186 @@ def backward_solve_batched(tables: DeviceTables, y: jax.Array) -> jax.Array:
     return _substitute_batched(tables, y)
 
 
+# ---------------------------------------------------------------------------
+# Round-major-native path: the PCG state itself lives in round-major
+# coordinates, so the preconditioner apply performs ZERO permutations and
+# both sweeps run as one fused pass (2S steps over one buffer).
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeviceFusedTables:
+    """sell.FusedRoundMajorTables moved to device as a pytree.
+
+    Row ``g`` of each array drives fused step ``g``: forward rounds for
+    ``g < S``, backward rounds (backward execution order) for ``g >= S``.
+    """
+    cols: jax.Array   # (2S, R, K) int32 — fwd-round-major gather positions
+    vals: jax.Array   # (2S, R, K)
+    dinv: jax.Array   # (2S, R)
+
+    def tree_flatten(self):
+        return (self.cols, self.vals, self.dinv), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n_steps(self) -> int:
+        """Rounds per sweep (the fused loop runs 2 * n_steps steps)."""
+        return self.dinv.shape[0] // 2
+
+    @property
+    def lanes(self) -> int:
+        return self.dinv.shape[1]
+
+    @classmethod
+    def from_host(cls, f: FusedRoundMajorTables,
+                  dtype=jnp.float64) -> "DeviceFusedTables":
+        return cls(cols=jnp.asarray(f.cols),
+                   vals=jnp.asarray(f.vals, dtype=dtype),
+                   dinv=jnp.asarray(f.dinv, dtype=dtype))
+
+
+def _substitute_fused(tables: DeviceFusedTables, q: jax.Array) -> jax.Array:
+    """Fused fwd+bwd substitution in round-major coordinates.  q: (S, R).
+
+    The round-major ``_substitute``: each step's store is a dense
+    ``lax.dynamic_update_slice`` instead of the ``y.at[rows].set`` scatter
+    of the index-space path — the backward half overwrites the forward
+    result in place, in reverse slice order (see kernels/hbmc_trisolve.py
+    for the safety argument).  Zero scatter ops in the jaxpr.
+    """
+    s_, r_ = q.shape
+    s2 = 2 * s_
+    y0 = jnp.zeros((s_ * r_,), dtype=q.dtype)
+
+    def body(g, y):
+        gathered = jnp.take(y, tables.cols[g], axis=0, fill_value=0)  # (R, K)
+        # einsum (not elementwise-multiply + sum): XLA contracts it directly
+        # instead of materializing the product — measurably faster on CPU.
+        # The kernel-exact op order lives in kernels/ref.py instead.
+        acc = jnp.einsum("rk,rk->r", tables.vals[g], gathered)
+        dest = jnp.where(g < s_, g, s2 - 1 - g) * r_
+        q_cur = jnp.where(g < s_, q[jnp.minimum(g, s_ - 1)],
+                          jax.lax.dynamic_slice(y, (dest,), (r_,)))
+        t = (q_cur - acc) * tables.dinv[g]
+        return jax.lax.dynamic_update_slice(y, t, (dest,))
+
+    return jax.lax.fori_loop(0, s2, body, y0)
+
+
+def _substitute_fused_batched(tables: DeviceFusedTables,
+                              q: jax.Array) -> jax.Array:
+    """Multi-RHS fused substitution.  q: (S, R, B) -> (S*R, B)."""
+    s_, r_, b_ = q.shape
+    s2 = 2 * s_
+    y0 = jnp.zeros((s_ * r_, b_), dtype=q.dtype)
+
+    def body(g, y):
+        gathered = jnp.take(y, tables.cols[g], axis=0, fill_value=0)
+        acc = jnp.einsum("rk,rkb->rb", tables.vals[g], gathered)
+        dest = jnp.where(g < s_, g, s2 - 1 - g) * r_
+        q_cur = jnp.where(g < s_, q[jnp.minimum(g, s_ - 1)],
+                          jax.lax.dynamic_slice(y, (dest, jnp.zeros_like(dest)), (r_, b_)))
+        t = (q_cur - acc) * tables.dinv[g][:, None]
+        return jax.lax.dynamic_update_slice(y, t, (dest, jnp.zeros_like(dest)))
+
+    return jax.lax.fori_loop(0, s2, body, y0)
+
+
+@jax.jit
+def fused_solve(tables: DeviceFusedTables, q: jax.Array) -> jax.Array:
+    """z = (L L^T)^{-1} q, round-major in and out.  q: (S, R) -> (S*R,)."""
+    return _substitute_fused(tables, q)
+
+
+@jax.jit
+def fused_solve_batched(tables: DeviceFusedTables, q: jax.Array) -> jax.Array:
+    """Multi-RHS fused apply.  q: (S, R, B) -> (S*R, B)."""
+    return _substitute_fused_batched(tables, q)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundMajorPreconditioner:
+    """IC(0) apply operating natively on round-major (m,) state vectors.
+
+    Unlike ``HBMCPreconditioner`` (which gathers/scatters between index
+    space and the solve layout on every apply), this preconditioner's input
+    and output ARE round-major: the only permutations of a solve happen in
+    ``RoundMajorLayout.embed``/``extract``, once each, outside the PCG loop.
+
+    ``backend="xla"`` runs ``fused_solve`` (fori_loop, dynamic slices);
+    ``backend="pallas"`` runs ``kernels.hbmc_trisolve_fused`` (one
+    pallas_call, 2S-step sequential grid, y VMEM-resident across sweeps).
+    """
+    tables: DeviceFusedTables
+    backend: str = "xla"
+    interpret: bool | None = None
+
+    @property
+    def n_rounds(self) -> int:
+        return self.tables.n_steps
+
+    @property
+    def m(self) -> int:
+        return self.tables.n_steps * self.tables.lanes
+
+    def _reshape(self, r: jax.Array, batched: bool) -> jax.Array:
+        s_, lanes = self.tables.n_steps, self.tables.lanes
+        shape = (s_, lanes) + ((r.shape[-1],) if batched else ())
+        return r.reshape(shape)
+
+    def __call__(self, r: jax.Array) -> jax.Array:
+        q = self._reshape(r, batched=False)
+        if self.backend == "pallas":
+            from repro.kernels.hbmc_trisolve import hbmc_trisolve_fused
+            return hbmc_trisolve_fused(self.tables.cols, self.tables.vals,
+                                       self.tables.dinv, q,
+                                       interpret=self.interpret)
+        return fused_solve(self.tables, q)
+
+    def apply_batched(self, r: jax.Array) -> jax.Array:
+        q = self._reshape(r, batched=True)
+        if self.backend == "pallas":
+            from repro.kernels.hbmc_trisolve import hbmc_trisolve_fused_batched
+            return hbmc_trisolve_fused_batched(
+                self.tables.cols, self.tables.vals, self.tables.dinv, q,
+                interpret=self.interpret)
+        return fused_solve_batched(self.tables, q)
+
+
+def build_round_major_preconditioner_from_rounds(
+        l_final: sp.csr_matrix, fwd_rounds, bwd_rounds, drop_mask=None,
+        dtype=jnp.float64, backend: str = "xla",
+        interpret: bool | None = None
+        ) -> tuple[RoundMajorPreconditioner, RoundMajorLayout]:
+    """Pack a factor into the fused round-major form; returns the native
+    preconditioner plus the layout (the b-in / x-out permutation pair)."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of "
+                         f"{BACKENDS}")
+    from .sell import pack_factor
+    fwd_h, bwd_h = pack_factor(l_final, fwd_rounds, bwd_rounds, drop_mask)
+    fused_h = fuse_round_major(fwd_h, bwd_h)
+    pre = RoundMajorPreconditioner(
+        tables=DeviceFusedTables.from_host(fused_h, dtype=dtype),
+        backend=backend, interpret=interpret)
+    return pre, fused_h.layout
+
+
+def build_round_major_preconditioner(
+        l_final: sp.csr_matrix, ordering: HBMCOrdering, dtype=jnp.float64,
+        backend: str = "xla", interpret: bool | None = None
+        ) -> tuple[RoundMajorPreconditioner, RoundMajorLayout]:
+    from .sell import rounds_hbmc
+    return build_round_major_preconditioner_from_rounds(
+        l_final, rounds_hbmc(ordering, reverse=False),
+        rounds_hbmc(ordering, reverse=True), drop_mask=ordering.is_dummy,
+        dtype=dtype, backend=backend, interpret=interpret)
+
+
 @dataclasses.dataclass(frozen=True)
 class HBMCPreconditioner:
     """IC(0) preconditioner  M^{-1} r = (L L^T)^{-1} r  in HBMC order.
@@ -174,7 +363,7 @@ class HBMCPreconditioner:
 
 def _assemble_preconditioner(fwd_h: StepTables, bwd_h: StepTables,
                              n_final: int, dtype, backend: str,
-                             interpret: bool) -> HBMCPreconditioner:
+                             interpret: bool | None) -> HBMCPreconditioner:
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of "
                          f"{BACKENDS}")
@@ -194,7 +383,7 @@ def _assemble_preconditioner(fwd_h: StepTables, bwd_h: StepTables,
 
 def build_preconditioner(l_final: sp.csr_matrix, ordering: HBMCOrdering,
                          dtype=jnp.float64, backend: str = "xla",
-                         interpret: bool = True) -> HBMCPreconditioner:
+                         interpret: bool | None = None) -> HBMCPreconditioner:
     fwd_h, bwd_h = pack_factor_hbmc(l_final, ordering)
     return _assemble_preconditioner(fwd_h, bwd_h, ordering.n_final, dtype,
                                     backend, interpret)
@@ -203,7 +392,7 @@ def build_preconditioner(l_final: sp.csr_matrix, ordering: HBMCOrdering,
 def build_preconditioner_from_rounds(
         l_final: sp.csr_matrix, fwd_rounds, bwd_rounds,
         drop_mask=None, dtype=jnp.float64, backend: str = "xla",
-        interpret: bool = True) -> HBMCPreconditioner:
+        interpret: bool | None = None) -> HBMCPreconditioner:
     """Generic variant: MC / BMC / natural solvers share the machinery."""
     from .sell import pack_factor
     fwd_h, bwd_h = pack_factor(l_final, fwd_rounds, bwd_rounds, drop_mask)

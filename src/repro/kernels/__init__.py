@@ -10,7 +10,10 @@ Both ship ops.py jit wrappers and ref.py pure-jnp oracles, and are
 validated in interpret mode across (shape, b_s, w, dtype) sweeps
 (tests/test_trisolve.py).
 """
-from .hbmc_trisolve import hbmc_trisolve, hbmc_trisolve_batched
+from .config import default_interpret, resolve_interpret
+from .hbmc_trisolve import (hbmc_trisolve, hbmc_trisolve_batched,
+                            hbmc_trisolve_fused, hbmc_trisolve_fused_batched)
 from .sell_spmv import sell_spmv
 from .ops import DeviceRoundMajorTables, build_kernel_preconditioner
-from .ref import hbmc_trisolve_batched_ref, hbmc_trisolve_ref, sell_spmv_ref
+from .ref import (hbmc_trisolve_batched_ref, hbmc_trisolve_fused_batched_ref,
+                  hbmc_trisolve_fused_ref, hbmc_trisolve_ref, sell_spmv_ref)

@@ -1,0 +1,21 @@
+"""Shared kernel configuration helpers.
+
+``interpret`` used to default to ``True`` at every Pallas call site, which
+meant real-TPU runs silently got the (slow) interpreter unless the caller
+threaded ``interpret=False`` through every layer.  All kernel entry points
+now take ``interpret=None`` and resolve it here: compiled on TPU,
+interpreted everywhere else (CPU/GPU development and CI).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """True iff Pallas kernels should run in interpret mode (no TPU)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve an ``interpret`` argument: ``None`` -> backend default."""
+    return default_interpret() if interpret is None else bool(interpret)

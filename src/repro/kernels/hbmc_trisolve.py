@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .config import resolve_interpret
+
 
 def _trisolve_kernel(cols_ref, vals_ref, dinv_ref, q_ref, y_in_ref, y_ref):
     s = pl.program_id(0)
@@ -70,7 +72,7 @@ def _trisolve_batched_kernel(cols_ref, vals_ref, dinv_ref, q_ref, y_in_ref,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def hbmc_trisolve(cols: jax.Array, vals: jax.Array, dinv: jax.Array,
-                  q: jax.Array, *, interpret: bool = True) -> jax.Array:
+                  q: jax.Array, *, interpret: bool | None = None) -> jax.Array:
     """Solve the round-major packed triangular system.
 
     Args:
@@ -83,6 +85,7 @@ def hbmc_trisolve(cols: jax.Array, vals: jax.Array, dinv: jax.Array,
     Returns:
       y: (S*R,) solution in round-major layout.
     """
+    interpret = resolve_interpret(interpret)
     s_, r_, k_ = cols.shape
     dtype = vals.dtype
     y0 = jnp.zeros((s_ * r_,), dtype=dtype)
@@ -106,7 +109,7 @@ def hbmc_trisolve(cols: jax.Array, vals: jax.Array, dinv: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def hbmc_trisolve_batched(cols: jax.Array, vals: jax.Array, dinv: jax.Array,
-                          q: jax.Array, *, interpret: bool = True
+                          q: jax.Array, *, interpret: bool | None = None
                           ) -> jax.Array:
     """Solve the round-major packed triangular system for B RHS at once.
 
@@ -119,6 +122,7 @@ def hbmc_trisolve_batched(cols: jax.Array, vals: jax.Array, dinv: jax.Array,
     Returns:
       y: (S*R, B) solutions in round-major layout.
     """
+    interpret = resolve_interpret(interpret)
     s_, r_, k_ = cols.shape
     b_ = q.shape[-1]
     dtype = vals.dtype
@@ -135,6 +139,130 @@ def hbmc_trisolve_batched(cols: jax.Array, vals: jax.Array, dinv: jax.Array,
             pl.BlockSpec((s_ * r_, b_), lambda s: (0, 0)),  # y (aliased)
         ],
         out_specs=pl.BlockSpec((s_ * r_, b_), lambda s: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_ * r_, b_), dtype),
+        input_output_aliases={4: 0},
+        interpret=interpret,
+    )(cols, vals, dinv, q, y0)
+
+
+# ---------------------------------------------------------------------------
+# Fused forward+backward sweep: ONE pallas_call, 2S sequential grid steps.
+# ---------------------------------------------------------------------------
+#
+# The backward rounds are the forward rounds reversed (lane order included),
+# so in forward round-major coordinates the backward sweep's stores are ALSO
+# dense contiguous slices: step g >= S writes slice (2S-1-g)*R.  One VMEM
+# buffer therefore carries the whole preconditioner apply: the forward half
+# fills it with y = L^{-1} q, the backward half overwrites it in place with
+# z = L^{-T} y in reverse slice order (each backward gather touches only
+# already-overwritten z slices; the current slice's y is read just before its
+# store).  Compared with two pallas_calls this halves kernel launches and
+# keeps y VMEM-resident across the fwd->bwd handoff instead of round-tripping
+# through HBM.
+
+
+def _fused_kernel(cols_ref, vals_ref, dinv_ref, q_ref, y_in_ref, y_ref):
+    g = pl.program_id(0)
+    s_half = q_ref.shape[0]       # S (rounds per sweep); grid is 2S
+    r = cols_ref.shape[1]
+    y = y_ref[...]                # (S*R,) aliased in/out accumulator
+    gathered = jnp.take(y, cols_ref[0], axis=0, fill_value=0)   # (R, K)
+    acc = jnp.sum(vals_ref[0] * gathered, axis=-1)              # (R,)
+    dest = jnp.where(g < s_half, g, 2 * s_half - 1 - g) * r
+    # forward RHS comes from q; backward RHS is the y slice being overwritten
+    q_fwd = q_ref[pl.ds(jnp.minimum(g, s_half - 1), 1), :][0]   # (R,)
+    q_bwd = jax.lax.dynamic_slice(y, (dest,), (r,))
+    q_cur = jnp.where(g < s_half, q_fwd, q_bwd)
+    t = (q_cur - acc) * dinv_ref[0]
+    y_ref[pl.ds(dest, r)] = t             # dense contiguous store, both halves
+
+
+def _fused_batched_kernel(cols_ref, vals_ref, dinv_ref, q_ref, y_in_ref,
+                          y_ref):
+    g = pl.program_id(0)
+    s_half = q_ref.shape[0]
+    r = cols_ref.shape[1]
+    b = q_ref.shape[-1]
+    y = y_ref[...]                # (S*R, B) aliased in/out
+    gathered = jnp.take(y, cols_ref[0], axis=0, fill_value=0)   # (R, K, B)
+    acc = jnp.sum(vals_ref[0][..., None] * gathered, axis=1)    # (R, B)
+    dest = jnp.where(g < s_half, g, 2 * s_half - 1 - g) * r
+    q_fwd = q_ref[pl.ds(jnp.minimum(g, s_half - 1), 1), :, :][0]   # (R, B)
+    q_bwd = jax.lax.dynamic_slice(y, (dest, jnp.zeros_like(dest)), (r, b))
+    q_cur = jnp.where(g < s_half, q_fwd, q_bwd)
+    t = (q_cur - acc) * dinv_ref[0][:, None]
+    y_ref[pl.ds(dest, r), :] = t
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hbmc_trisolve_fused(cols: jax.Array, vals: jax.Array, dinv: jax.Array,
+                        q: jax.Array, *, interpret: bool | None = None
+                        ) -> jax.Array:
+    """z = (L L^T)^{-1} q in round-major coordinates, one kernel launch.
+
+    Args:
+      cols: (2S, R, K) int32 — forward round-major gather positions; rows
+        0..S-1 are the forward rounds, S..2S-1 the backward rounds in
+        backward execution order (``sell.fuse_round_major``).
+      vals: (2S, R, K) — off-diagonal values (0 on padding).
+      dinv: (2S, R) — inverse diagonal (0 on padding lanes).
+      q:    (S, R) — right-hand side in round-major layout.
+
+    Returns:
+      z: (S*R,) solution in round-major layout (holes stay 0).
+    """
+    s2, r_, k_ = cols.shape
+    s_ = s2 // 2
+    if q.shape != (s_, r_):
+        raise ValueError(f"q shape {q.shape} != rounds shape {(s_, r_)}")
+    interpret = resolve_interpret(interpret)
+    dtype = vals.dtype
+    y0 = jnp.zeros((s_ * r_,), dtype=dtype)
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=(s2,),
+        in_specs=[
+            pl.BlockSpec((1, r_, k_), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, r_, k_), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, r_), lambda g: (g, 0)),
+            pl.BlockSpec((s_, r_), lambda g: (0, 0)),   # q fully resident
+            pl.BlockSpec((s_ * r_,), lambda g: (0,)),   # y (aliased input)
+        ],
+        out_specs=pl.BlockSpec((s_ * r_,), lambda g: (0,)),
+        out_shape=jax.ShapeDtypeStruct((s_ * r_,), dtype),
+        input_output_aliases={4: 0},
+        interpret=interpret,
+    )(cols, vals, dinv, q, y0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hbmc_trisolve_fused_batched(cols: jax.Array, vals: jax.Array,
+                                dinv: jax.Array, q: jax.Array, *,
+                                interpret: bool | None = None) -> jax.Array:
+    """Multi-RHS fused solve.  q: (S, R, B) -> z: (S*R, B).
+
+    The B right-hand sides share every gather of cols/vals/dinv across BOTH
+    sweeps, and the fwd->bwd handoff never leaves VMEM.
+    """
+    s2, r_, k_ = cols.shape
+    s_ = s2 // 2
+    b_ = q.shape[-1]
+    if q.shape != (s_, r_, b_):
+        raise ValueError(f"q shape {q.shape} != {(s_, r_, b_)}")
+    interpret = resolve_interpret(interpret)
+    dtype = vals.dtype
+    y0 = jnp.zeros((s_ * r_, b_), dtype=dtype)
+    return pl.pallas_call(
+        _fused_batched_kernel,
+        grid=(s2,),
+        in_specs=[
+            pl.BlockSpec((1, r_, k_), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, r_, k_), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, r_), lambda g: (g, 0)),
+            pl.BlockSpec((s_, r_, b_), lambda g: (0, 0, 0)),
+            pl.BlockSpec((s_ * r_, b_), lambda g: (0, 0)),  # y (aliased)
+        ],
+        out_specs=pl.BlockSpec((s_ * r_, b_), lambda g: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((s_ * r_, b_), dtype),
         input_output_aliases={4: 0},
         interpret=interpret,

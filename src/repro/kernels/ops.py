@@ -52,7 +52,7 @@ class DeviceRoundMajorTables:
         return cls.from_host(sell.to_round_major(t), dtype=dtype)
 
     def apply(self, q: jax.Array, *, use_kernel: bool = True,
-              interpret: bool = True) -> jax.Array:
+              interpret: bool | None = None) -> jax.Array:
         """One triangular solve.  q, result: (n_slots-1,) in HBMC order."""
         qp = jnp.concatenate([q, jnp.zeros((1,), dtype=q.dtype)])
         q_rm = qp[self.rows]                         # (S, R)
@@ -66,7 +66,7 @@ class DeviceRoundMajorTables:
         return y[:-1]
 
     def apply_batched(self, q: jax.Array, *, use_kernel: bool = True,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None) -> jax.Array:
         """Multi-RHS triangular solve.  q, result: (n_slots-1, B)."""
         qp = jnp.concatenate(
             [q, jnp.zeros((1, q.shape[1]), dtype=q.dtype)], axis=0)
@@ -88,7 +88,7 @@ class KernelPreconditioner:
     fwd: DeviceRoundMajorTables
     bwd: DeviceRoundMajorTables
     use_kernel: bool = True
-    interpret: bool = True
+    interpret: bool | None = None
 
     def __call__(self, r: jax.Array) -> jax.Array:
         y = self.fwd.apply(r, use_kernel=self.use_kernel,
@@ -106,7 +106,8 @@ class KernelPreconditioner:
 
 def build_kernel_preconditioner(fwd: StepTables, bwd: StepTables,
                                 dtype=jnp.float64, use_kernel: bool = True,
-                                interpret: bool = True) -> KernelPreconditioner:
+                                interpret: bool | None = None
+                                ) -> KernelPreconditioner:
     return KernelPreconditioner(
         fwd=DeviceRoundMajorTables.from_steps(fwd, dtype=dtype),
         bwd=DeviceRoundMajorTables.from_steps(bwd, dtype=dtype),

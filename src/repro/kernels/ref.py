@@ -40,3 +40,55 @@ def sell_spmv_ref(vals: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
     """SELL-w SpMV oracle.  vals/cols: (n_slices, K, w); x: (n,)."""
     g = jnp.take(x, cols, axis=0, fill_value=0)            # (S, K, w)
     return jnp.einsum("skw,skw->sw", vals, g).reshape(-1)
+
+
+def hbmc_trisolve_fused_ref(cols: jax.Array, vals: jax.Array,
+                            dinv: jax.Array, q: jax.Array) -> jax.Array:
+    """Fused fwd+bwd round-major solve oracle.  cols: (2S, R, K); q: (S, R).
+
+    Mirrors the fused kernel step for step: one buffer, forward half fills
+    y slice by slice, backward half overwrites it in place in reverse slice
+    order (see kernels/hbmc_trisolve.py for why that is safe).
+
+    Deliberately NOT shared with core.trisolve._substitute_fused: this
+    oracle reproduces the kernel's exact op order (elementwise multiply +
+    jnp.sum -> bit-exact in interpret mode, asserted in tests), while the
+    XLA production path contracts with einsum, which is faster on CPU but
+    reassociates the K-reduction.
+    """
+    s2, r_, k_ = cols.shape
+    s_ = s2 // 2
+    y0 = jnp.zeros((s_ * r_,), dtype=vals.dtype)
+
+    def body(g, y):
+        g_fwd = jnp.take(y, cols[g], axis=0, fill_value=0)     # (R, K)
+        acc = jnp.sum(vals[g] * g_fwd, axis=-1)
+        dest = jnp.where(g < s_, g, s2 - 1 - g) * r_
+        q_cur = jnp.where(g < s_, q[jnp.minimum(g, s_ - 1)],
+                          jax.lax.dynamic_slice(y, (dest,), (r_,)))
+        t = (q_cur - acc) * dinv[g]
+        return jax.lax.dynamic_update_slice(y, t, (dest,))
+
+    return jax.lax.fori_loop(0, s2, body, y0)
+
+
+def hbmc_trisolve_fused_batched_ref(cols: jax.Array, vals: jax.Array,
+                                    dinv: jax.Array, q: jax.Array
+                                    ) -> jax.Array:
+    """Multi-RHS fused oracle.  cols: (2S, R, K); q: (S, R, B) -> (S*R, B)."""
+    s2, r_, k_ = cols.shape
+    s_ = s2 // 2
+    b_ = q.shape[-1]
+    y0 = jnp.zeros((s_ * r_, b_), dtype=vals.dtype)
+
+    def body(g, y):
+        g_fwd = jnp.take(y, cols[g], axis=0, fill_value=0)     # (R, K, B)
+        acc = jnp.sum(vals[g][..., None] * g_fwd, axis=1)      # (R, B)
+        dest = jnp.where(g < s_, g, s2 - 1 - g) * r_
+        zero = jnp.zeros_like(dest)
+        q_cur = jnp.where(g < s_, q[jnp.minimum(g, s_ - 1)],
+                          jax.lax.dynamic_slice(y, (dest, zero), (r_, b_)))
+        t = (q_cur - acc) * dinv[g][:, None]
+        return jax.lax.dynamic_update_slice(y, t, (dest, zero))
+
+    return jax.lax.fori_loop(0, s2, body, y0)

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .config import resolve_interpret
+
 
 def _sell_spmv_kernel(vals_ref, cols_ref, x_ref, y_ref):
     vals = vals_ref[...]          # (T, K, w) tile of slices
@@ -26,7 +28,8 @@ def _sell_spmv_kernel(vals_ref, cols_ref, x_ref, y_ref):
 
 @functools.partial(jax.jit, static_argnames=("slice_tile", "interpret"))
 def sell_spmv(vals: jax.Array, cols: jax.Array, x: jax.Array,
-              *, slice_tile: int = 256, interpret: bool = True) -> jax.Array:
+              *, slice_tile: int = 256,
+              interpret: bool | None = None) -> jax.Array:
     """y = A x with A in SELL-w layout.
 
     Args:
@@ -39,6 +42,7 @@ def sell_spmv(vals: jax.Array, cols: jax.Array, x: jax.Array,
     Returns:
       y: (n_slices * w,) in slice-row-major order.
     """
+    interpret = resolve_interpret(interpret)
     n_slices, k_, w_ = vals.shape
     t = min(slice_tile, n_slices)
     # pad slice count to a multiple of the tile
