@@ -1,0 +1,334 @@
+"""Setup-pipeline benchmark: round-parallel IC(0) + SolverPlan reuse.
+
+Three questions, one JSON answer (schema ``bench_setup/v1``):
+
+  1. **Setup breakdown + legacy speedup** — cold ``build_plan`` wall-clock
+     split into ordering / factor / pack, against the seed's "legacy"
+     pipeline (per-node block building, sequential up-looking ``ic0``,
+     per-row step/ELL packing — preserved verbatim below), per ordering
+     method.  Acceptance tracks ``legacy_over_plan`` for hbmc on
+     ``lap3d_16_27`` (>= 5x).
+  2. **Plan-reuse amortization** — cold ``solve_iccg`` vs warm
+     ``plan.solve`` for the same system: the warm path must spend ~zero
+     host-side setup (``warm_setup_s``) and amortize the cold setup away
+     after ``breakeven_solves`` solves.
+  3. **Refactor vs full setup** — ``plan.refactor(a')`` (numeric-only:
+     values change, pattern fixed — the implicit time-stepping workload)
+     vs building a fresh plan.
+
+    PYTHONPATH=src python -m benchmarks.bench_setup [--smoke]
+        [--out BENCH_setup.json]
+
+CI runs ``--smoke`` and uploads the artifact; the committed snapshot is the
+tracked trajectory sample.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+import scipy.sparse as sp  # noqa: E402
+
+from repro.core import build_plan, ic0, sell, solve_iccg  # noqa: E402
+from repro.core import coloring  # noqa: E402
+from repro.core.matrices import laplace_2d, laplace_3d  # noqa: E402
+from repro.core.solvers import _order_system  # noqa: E402
+
+BS, W = 32, 8
+
+
+# ---------------------------------------------------------------------------
+# The seed setup pipeline, preserved verbatim as the trajectory baseline:
+# per-node block building with Python sets, per-row step/ELL packing, and
+# the sequential up-looking IC(0) (which still lives in core.ic0 as the
+# semantics oracle).  This is what every solve_iccg call paid before the
+# round-parallel pipeline.
+# ---------------------------------------------------------------------------
+
+def _seed_build_blocks(a, block_size):
+    import heapq
+    n = a.shape[0]
+    from repro.core.graph import adjacency_lists
+    indptr, indices = adjacency_lists(a)
+    assigned = np.zeros(n, dtype=bool)
+    blocks = []
+    next_seed = 0
+    while True:
+        while next_seed < n and assigned[next_seed]:
+            next_seed += 1
+        if next_seed >= n:
+            break
+        blk = [next_seed]
+        assigned[next_seed] = True
+        heap, in_heap = [], set()
+        for u in indices[indptr[next_seed]:indptr[next_seed + 1]]:
+            if not assigned[u] and u not in in_heap:
+                heapq.heappush(heap, int(u)); in_heap.add(int(u))
+        while len(blk) < block_size and heap:
+            v = heapq.heappop(heap)
+            if assigned[v]:
+                continue
+            blk.append(v)
+            assigned[v] = True
+            for u in indices[indptr[v]:indptr[v + 1]]:
+                u = int(u)
+                if not assigned[u] and u not in in_heap:
+                    heapq.heappush(heap, u); in_heap.add(u)
+        blk.sort()
+        blocks.append(blk)
+    return blocks
+
+
+def _seed_pack_steps(tri, diag, rounds, drop_mask=None):
+    tri = sp.csr_matrix(tri)
+    tri.sort_indices()
+    n = tri.shape[0]
+    n_slots = n + 1
+    if drop_mask is not None:
+        rounds = [r[~drop_mask[r]] for r in rounds]
+        rounds = [r for r in rounds if len(r)]
+    S = len(rounds)
+    R = max(len(r) for r in rounds)
+    K = max(int(np.diff(tri.indptr).max(initial=0)), 1)
+    rows = np.full((S, R), n_slots - 1, dtype=np.int32)
+    cols = np.full((S, R, K), n_slots - 1, dtype=np.int32)
+    vals = np.zeros((S, R, K))
+    dinv = np.zeros((S, R))
+    live = np.zeros(S, dtype=np.int32)
+    for s, rset in enumerate(rounds):
+        live[s] = len(rset)
+        rows[s, :len(rset)] = rset
+        dinv[s, :len(rset)] = 1.0 / diag[rset]
+        for t, r in enumerate(rset):
+            lo, hi = tri.indptr[r], tri.indptr[r + 1]
+            cols[s, t, :hi - lo] = tri.indices[lo:hi]
+            vals[s, t, :hi - lo] = tri.data[lo:hi]
+    return sell.StepTables(rows=rows, cols=cols, vals=vals, dinv=dinv,
+                           n_slots=n_slots, live=live)
+
+
+def _seed_pack_ell(a):
+    a = sp.csr_matrix(a)
+    a.sort_indices()
+    n = a.shape[0]
+    k = max(int(np.diff(a.indptr).max(initial=0)), 1)
+    cols = np.zeros((n, k), dtype=np.int32)
+    vals = np.zeros((n, k))
+    for r in range(n):
+        lo, hi = a.indptr[r], a.indptr[r + 1]
+        cols[r, :hi - lo] = a.indices[lo:hi]
+        vals[r, :hi - lo] = a.data[lo:hi]
+    return cols, vals
+
+
+def _legacy_setup(a, method):
+    """Seed pipeline end to end: ordering -> sequential IC(0) -> per-row
+    packing -> fused tables + ELL SpMV operand, moved to device (the same
+    endpoint ``build_plan`` is charged for).  Returns the per-stage split
+    (ordering_s, factor_s, pack_s)."""
+    import jax.numpy as jnp
+
+    from repro.core.trisolve import DeviceFusedTables
+    t0 = time.perf_counter()
+    orig = coloring._build_blocks
+    coloring._build_blocks = _seed_build_blocks
+    try:
+        sysd = _order_system(a, None, method, BS, W)
+    finally:
+        coloring._build_blocks = orig
+    t1 = time.perf_counter()
+    l_bar = ic0(sysd.a_bar)
+    t2 = time.perf_counter()
+    diag = l_bar.diagonal()
+    strict_lower = sp.tril(l_bar, k=-1, format="csr")
+    fwd = _seed_pack_steps(strict_lower, diag, sysd.fwd_rounds, sysd.drop)
+    bwd = _seed_pack_steps(sp.csr_matrix(strict_lower.T), diag,
+                           sysd.bwd_rounds, sysd.drop)
+    fused = sell.fuse_round_major(fwd, bwd)
+    DeviceFusedTables.from_host(fused)
+    cols, vals = _seed_pack_ell(
+        sell.permute_round_major(sysd.a_bar, fused.layout))
+    jnp.asarray(vals), jnp.asarray(cols)
+    t3 = time.perf_counter()
+    return t1 - t0, t2 - t1, t3 - t2
+
+
+def _problems(smoke: bool):
+    if smoke:
+        return [("lap2d_tiny", laplace_2d(16, 14)),
+                ("lap3d_tiny_27", laplace_3d(6, 6, 5, stencil=27))]
+    return [("lap2d_64", laplace_2d(64, 64)),
+            ("lap3d_16_27", laplace_3d(16, 16, 16, stencil=27))]
+
+
+def _best(fn, reps):
+    """Best-of-reps wall-clock (min is robust to scheduler noise)."""
+    best, out = float("inf"), None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def bench_setup_breakdown(name, a, method, reps):
+    """Cold plan setup (with stage breakdown) vs the legacy sequential path.
+
+    Plan and legacy reps are interleaved so scheduler noise hits both sides
+    alike; best-of-reps on each."""
+    a = sp.csr_matrix(a)
+    breakdown = {"ordering": float("inf"), "factor": float("inf"),
+                 "pack": float("inf")}
+    lg = {"ordering": float("inf"), "factor": float("inf"),
+          "pack": float("inf")}
+    plan_s = legacy_s = float("inf")
+    for _ in range(reps):
+        plan = build_plan(a, method=method, block_size=BS, w=W)
+        t = plan.timings
+        plan_s = min(plan_s, t.total)
+        for k in breakdown:
+            breakdown[k] = min(breakdown[k], getattr(t, k))
+        t0 = time.perf_counter()
+        lo, lf, lp = _legacy_setup(a, method)
+        legacy_s = min(legacy_s, time.perf_counter() - t0)
+        lg["ordering"] = min(lg["ordering"], lo)
+        lg["factor"] = min(lg["factor"], lf)
+        lg["pack"] = min(lg["pack"], lp)
+    # the stages the round-parallel pipeline vectorizes (the Python
+    # ordering front-end is shared machinery, already ~2x the seed's)
+    fp_plan = breakdown["factor"] + breakdown["pack"]
+    fp_legacy = lg["factor"] + lg["pack"]
+    return {
+        "problem": name, "n": int(a.shape[0]), "method": method,
+        "plan_setup_s": round(plan_s, 5),
+        "ordering_s": round(breakdown["ordering"], 5),
+        "factor_s": round(breakdown["factor"], 5),
+        "pack_s": round(breakdown["pack"], 5),
+        "legacy_setup_s": round(legacy_s, 5),
+        "legacy_ordering_s": round(lg["ordering"], 5),
+        "legacy_factor_s": round(lg["factor"], 5),
+        "legacy_pack_s": round(lg["pack"], 5),
+        "legacy_over_plan": round(legacy_s / plan_s, 2),
+        "factor_pack_speedup": round(fp_legacy / fp_plan, 2),
+    }
+
+
+def bench_plan_reuse(name, a, reps, maxiter):
+    """Cold solve_iccg vs warm plan.solve on the same system."""
+    a = sp.csr_matrix(a)
+    b = np.random.default_rng(0).normal(size=a.shape[0])
+    kw = dict(method="hbmc", block_size=BS, w=W, rtol=0.0, maxiter=maxiter)
+
+    cold_s, rep = _best(lambda: solve_iccg(a, b, **kw), reps)
+    plan = build_plan(a, method="hbmc", block_size=BS, w=W)
+    plan.solve(b, rtol=0.0, maxiter=maxiter)       # warm the jit cache
+    warm_s, wrep = _best(lambda: plan.solve(b, rtol=0.0, maxiter=maxiter),
+                         reps)
+    warm_setup = wrep.setup_seconds
+    setup_s = plan.timings.total
+    gain = cold_s - warm_s
+    return {
+        "problem": name, "n": int(a.shape[0]), "maxiter": maxiter,
+        "cold_solve_iccg_s": round(cold_s, 5),
+        "warm_plan_solve_s": round(warm_s, 5),
+        "warm_setup_s": round(warm_setup, 6),
+        "plan_setup_s": round(setup_s, 5),
+        "cold_over_warm": round(cold_s / warm_s, 2),
+        # solves until holding the plan has paid for building it
+        "breakeven_solves": (int(np.ceil(setup_s / gain))
+                             if gain > 0 else None),
+    }
+
+
+def bench_refactor(name, a, reps):
+    """plan.refactor (values change, same pattern) vs a fresh build_plan."""
+    a = sp.csr_matrix(a)
+    plan = build_plan(a, method="hbmc", block_size=BS, w=W)
+    full_s = plan.timings.total
+    for _ in range(max(reps - 1, 0)):
+        full_s = min(full_s, build_plan(a, method="hbmc", block_size=BS,
+                                        w=W).timings.total)
+    a2 = (a + 0.1 * sp.diags(a.diagonal())).tocsr()
+    b = np.random.default_rng(1).normal(size=a.shape[0])
+    plan.solve(b, rtol=0.0, maxiter=5)            # trace the PCG once
+    refac_s = post_s = float("inf")
+    for _ in range(reps):
+        refac_s = min(refac_s, plan.refactor(a2).total)
+        # first solve after a refactor: operands are jit ARGUMENTS, so the
+        # cached executable is reused — no retrace, no recompile
+        rep = plan.solve(b, rtol=0.0, maxiter=5)
+        post_s = min(post_s, rep.solve_seconds)
+    return {
+        "problem": name, "n": int(a.shape[0]),
+        "full_setup_s": round(full_s, 5),
+        "refactor_s": round(refac_s, 5),
+        "post_refactor_solve_s": round(post_s, 5),
+        "retraces": plan._trace_count,
+        "full_over_refactor": round(full_s / refac_s, 2),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny problems, fewer reps (CI)")
+    ap.add_argument("--out", default="BENCH_setup.json")
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--maxiter", type=int, default=None)
+    args = ap.parse_args()
+
+    reps = args.reps or (2 if args.smoke else 5)
+    maxiter = args.maxiter or (10 if args.smoke else 40)
+
+    problems = _problems(args.smoke)
+    breakdown = [bench_setup_breakdown(name, a, method, reps)
+                 for name, a in problems
+                 for method in ("hbmc", "bmc", "mc")]
+    reuse = [bench_plan_reuse(name, a, reps, maxiter)
+             for name, a in problems]
+    refactor = [bench_refactor(name, a, reps) for name, a in problems]
+
+    doc = {
+        "schema": "bench_setup/v1",
+        "platform": jax.default_backend(),
+        "smoke": bool(args.smoke),
+        "block_size": BS,
+        "w": W,
+        "setup_breakdown": breakdown,
+        "plan_reuse": reuse,
+        "refactor": refactor,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+
+    print(f"{'problem':14s} {'method':6s} {'plan s':>8s} {'legacy s':>9s} "
+          f"{'total':>7s} {'fac+pack':>9s}   (ordering/factor/pack)")
+    for r in breakdown:
+        print(f"{r['problem']:14s} {r['method']:6s} {r['plan_setup_s']:8.3f} "
+              f"{r['legacy_setup_s']:9.3f} {r['legacy_over_plan']:6.1f}x "
+              f"{r['factor_pack_speedup']:8.1f}x   "
+              f"({r['ordering_s']:.3f}/{r['factor_s']:.3f}/{r['pack_s']:.3f})")
+    print(f"\n{'problem':14s} {'cold s':>8s} {'warm s':>8s} {'ratio':>6s} "
+          f"{'warm setup s':>13s} {'breakeven':>10s}")
+    for r in reuse:
+        print(f"{r['problem']:14s} {r['cold_solve_iccg_s']:8.3f} "
+              f"{r['warm_plan_solve_s']:8.3f} {r['cold_over_warm']:5.1f}x "
+              f"{r['warm_setup_s']:13.6f} {str(r['breakeven_solves']):>10s}")
+    print(f"\n{'problem':14s} {'full s':>8s} {'refactor s':>11s} "
+          f"{'ratio':>6s} {'post-solve s':>13s} {'retraces':>9s}")
+    for r in refactor:
+        print(f"{r['problem']:14s} {r['full_setup_s']:8.3f} "
+              f"{r['refactor_s']:11.3f} {r['full_over_refactor']:5.1f}x "
+              f"{r['post_refactor_solve_s']:13.5f} {r['retraces']:9d}")
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

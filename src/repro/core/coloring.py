@@ -18,7 +18,7 @@ import dataclasses
 import numpy as np
 import scipy.sparse as sp
 
-from .graph import adjacency_lists
+from .graph import adjacency_lists, ragged_arange
 
 
 def greedy_color(indptr: np.ndarray, indices: np.ndarray, n: int,
@@ -87,13 +87,23 @@ class BMCOrdering:
 
 
 def _build_blocks(a: sp.spmatrix, block_size: int) -> list[list[int]]:
-    """Min-index-seeded greedy block growing (2012 paper, simplest heuristic)."""
+    """Min-index-seeded greedy block growing (2012 paper, simplest heuristic).
+
+    Plain-Python-int hot loop (adjacency converted to lists once, a stamp
+    array instead of a per-block set): same blocks as the original numpy
+    walk, a few times faster — block building is the dominant host cost of
+    the hbmc setup pipeline once factorization and packing are vectorized.
+    """
     n = a.shape[0]
-    indptr, indices = adjacency_lists(a)
-    assigned = np.zeros(n, dtype=bool)
+    indptr_a, indices_a = adjacency_lists(a)
+    indptr = indptr_a.tolist()
+    indices = indices_a.tolist()
+    assigned = bytearray(n)
+    in_heap = [0] * n        # stamp = block id + 1 marks "already pushed"
     blocks: list[list[int]] = []
     # frontier-based growth: keep candidate set of neighbors of current block
     import heapq
+    heappush, heappop = heapq.heappush, heapq.heappop
     next_seed = 0
     while True:
         while next_seed < n and assigned[next_seed]:
@@ -101,22 +111,21 @@ def _build_blocks(a: sp.spmatrix, block_size: int) -> list[list[int]]:
         if next_seed >= n:
             break
         blk = [next_seed]
-        assigned[next_seed] = True
+        assigned[next_seed] = 1
+        stamp = len(blocks) + 1
         heap: list[int] = []
-        in_heap = set()
         for u in indices[indptr[next_seed]:indptr[next_seed + 1]]:
-            if not assigned[u] and u not in in_heap:
-                heapq.heappush(heap, int(u)); in_heap.add(int(u))
+            if not assigned[u] and in_heap[u] != stamp:
+                in_heap[u] = stamp; heappush(heap, u)
         while len(blk) < block_size and heap:
-            v = heapq.heappop(heap)
+            v = heappop(heap)
             if assigned[v]:
                 continue
             blk.append(v)
-            assigned[v] = True
+            assigned[v] = 1
             for u in indices[indptr[v]:indptr[v + 1]]:
-                u = int(u)
-                if not assigned[u] and u not in in_heap:
-                    heapq.heappush(heap, u); in_heap.add(u)
+                if not assigned[u] and in_heap[u] != stamp:
+                    in_heap[u] = stamp; heappush(heap, u)
         blk.sort()  # preserve original relative order inside the block
         blocks.append(blk)
     return blocks
@@ -148,18 +157,18 @@ def block_multicolor_ordering(a: sp.spmatrix, block_size: int) -> BMCOrdering:
     blocks_per_color = np.bincount(bcolors, minlength=n_colors)
 
     n_padded = nb * block_size
-    perm = np.full(n, -1, dtype=np.int64)
-    block_of_new = np.empty(n_padded, dtype=np.int64)
-    is_dummy = np.zeros(n_padded, dtype=bool)
-    pos = 0
-    for newb, oldb in enumerate(border):
-        blk = blocks[oldb]
-        block_of_new[pos:pos + block_size] = newb
-        for j, v in enumerate(blk):
-            perm[v] = pos + j
-        if len(blk) < block_size:
-            is_dummy[pos + len(blk):pos + block_size] = True
-        pos += block_size
+    ordered = [blocks[oldb] for oldb in border]
+    blk_lens = np.fromiter((len(b) for b in ordered), dtype=np.int64,
+                           count=nb)
+    import itertools
+    flat = np.fromiter(itertools.chain.from_iterable(ordered),
+                       dtype=np.int64, count=n)
+    within = ragged_arange(blk_lens)
+    perm = np.empty(n, dtype=np.int64)
+    perm[flat] = np.repeat(np.arange(nb) * block_size, blk_lens) + within
+    block_of_new = np.repeat(np.arange(nb), block_size)
+    is_dummy = (np.arange(n_padded) % block_size
+                ) >= np.repeat(blk_lens, block_size)
     block_color = bcolors[border]
     return BMCOrdering(
         perm=perm, n=n, n_padded=n_padded, block_size=block_size,

@@ -12,6 +12,20 @@ import numpy as np
 import scipy.sparse as sp
 
 
+def ragged_arange(counts: np.ndarray, dtype=np.int64) -> np.ndarray:
+    """Segment-relative indices: ``[0..counts[0]), [0..counts[1]), ...``.
+
+    The shared ragged-enumeration idiom of the vectorized setup pipeline
+    (step packing, ELL scatters, round-parallel IC(0) candidates): one flat
+    array holding, for every segment ``i``, the run ``0..counts[i]-1``.
+    ``dtype`` must be able to hold ``counts.sum()``.
+    """
+    counts = np.asarray(counts, dtype=dtype)
+    total = int(counts.sum())
+    return (np.arange(total, dtype=dtype)
+            - np.repeat(np.cumsum(counts) - counts, counts))
+
+
 def symmetrize_pattern(a: sp.spmatrix) -> sp.csr_matrix:
     """Return the symmetrized (pattern-wise) CSR form of ``a``."""
     a = sp.csr_matrix(a)

@@ -2,17 +2,43 @@
 
 A ~= L L^T where L is lower triangular with the same nonzero pattern as the
 lower triangular part of A.  The *shifted* variant factorizes
-diag-scaled  A + alpha diag(A)  (paper §5.1 uses alpha = 0.3 for Ieej) which
-guards against breakdown on semi-definite systems.
 
-This is host-side setup code (numpy; one-time cost amortized over the CG
-iterations), exactly as the reordering itself.  The factor is returned in CSR
-so the SELL packing (``sell.py``) can slice it per HBMC step.
+    A + alpha * diag(A)
+
+(the diagonal scaled by ``1 + alpha``); this is the paper's §5.1 shifted IC
+(alpha = 0.3 for Ieej) written without the diagonal scaling: factorizing the
+diagonally scaled matrix  D^{-1/2} A D^{-1/2} + alpha I  yields exactly
+``D^{-1/2} L`` where ``L`` is the factor of ``A + alpha diag(A)``, so the two
+formulations produce the same preconditioned operator up to a symmetric
+diagonal similarity (pinned by tests/test_setup_plan.py on the Ieej
+generator).  The shift guards against breakdown on semi-definite systems.
+
+Two implementations of the same factorization:
+
+  * ``ic0`` — the sequential up-looking row loop (the semantics oracle).
+  * ``ic0_rounds`` / ``ic0_structure`` + ``ic0_refactor`` — the
+    round-parallel setup pipeline.  Rows within a multi-color round are
+    mutually independent (the same property the triangular solve exploits),
+    so every dependency of a row's factorization — its lower neighbors and
+    their rows — lives in a strictly earlier round.  The factorization
+    therefore runs as ``sum_s max_rowlen(round_s)`` vectorized numpy steps:
+    all rows of a round advance one entry position per step as one batch.
+    ``ic0_structure`` does the pattern-only analysis once; ``ic0_refactor``
+    re-runs just the numeric phase (the factor-once / solve-many workload of
+    ``core.plan.SolverPlan``).
+
+Host-side setup code (numpy; one-time cost amortized over the CG
+iterations), exactly as the reordering itself.  Factors are returned in CSR
+so the SELL packing (``sell.py``) can slice them per HBMC step.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 import scipy.sparse as sp
+
+from .graph import ragged_arange
 
 
 def ic0(a: sp.spmatrix, shift: float = 0.0, breakdown_eps: float = 1e-13
@@ -21,7 +47,10 @@ def ic0(a: sp.spmatrix, shift: float = 0.0, breakdown_eps: float = 1e-13
 
     Row-oriented up-looking factorization restricted to pattern(tril(A)).
     Sorted-merge intersection of row patterns keeps it O(sum row^2) which is
-    fine for the stencil-type matrices used in the paper.
+    fine for the stencil-type matrices used in the paper.  ``shift`` applies
+    the diagonal scaling ``a_ii -> a_ii * (1 + shift)`` before factorizing
+    (see the module docstring for the relation to the paper's diagonally
+    scaled formulation).
     """
     a = sp.csr_matrix(a).astype(np.float64)
     n = a.shape[0]
@@ -80,6 +109,226 @@ def ic0(a: sp.spmatrix, shift: float = 0.0, breakdown_eps: float = 1e-13
         data[s:e] = row_vals
 
     return sp.csr_matrix((data, indices, indptr), shape=(n, n))
+
+
+# ---------------------------------------------------------------------------
+# Round-parallel IC(0): symbolic analysis once, vectorized numeric per call.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class IC0Structure:
+    """Pattern-only analysis of a round-parallel IC(0) factorization.
+
+    The factorization is scheduled as ``n_steps`` sequential *steps*; step
+    ``(round s, in-row offset t)`` computes entry ``t`` of every row of
+    round ``s`` as one numpy batch.  Entry values within a row depend on the
+    row's earlier entries (smaller ``t``, earlier step) and on rows of
+    strictly earlier rounds — both finished by construction, which
+    ``ic0_structure`` validates.
+
+    ``steps[s]`` is the fully precomputed work list of step ``s``:
+    ``(pos, n_off, dep_off, rows_di, pair_ab, n_pair, pair_tgt)`` where
+    ``pos`` holds the entry positions computed this step (off-diagonals
+    first, then diagonals — ``n_off`` splits them), ``dep_off`` the row
+    whose diagonal divides each off-diagonal, ``rows_di`` the rows whose
+    diagonal is produced, and ``pair_ab`` the inner-product operand
+    positions (``n_pair`` l_ik positions followed by ``n_pair`` matching
+    l_jk positions; ``pair_tgt`` the target entry, local within ``pos``),
+    sorted per target by ascending ``k`` so the accumulation order — and
+    hence the floats — match the sequential ``ic0`` merge exactly.
+    """
+    n: int
+    n_steps: int
+    indptr: np.ndarray       # lower pattern (incl. diagonal, sorted)
+    indices: np.ndarray
+    steps: list
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.size)
+
+    @property
+    def n_pairs(self) -> int:
+        return sum(s[5] for s in self.steps)
+
+
+def ic0_structure(a: sp.spmatrix, rounds: list[np.ndarray]) -> IC0Structure:
+    """Analyze pattern(tril(A)) for the round-parallel factorization.
+
+    ``rounds`` must partition the rows in execution order with all lower
+    neighbors of a row in strictly earlier rounds (exactly the property the
+    MC/BMC/HBMC forward rounds provide) — validated here, ValueError
+    otherwise.
+    """
+    a = sp.csr_matrix(a)
+    n = a.shape[0]
+    low = sp.tril(a, format="csr")
+    low.sort_indices()
+    indptr, indices = low.indptr, low.indices.astype(np.int64)
+    lens = np.diff(indptr)
+    nnz = int(indices.size)
+    if not np.array_equal(indices[indptr[1:] - 1], np.arange(n)):
+        missing = np.nonzero(indices[indptr[1:] - 1] != np.arange(n))[0]
+        raise ValueError(f"missing diagonal in row {missing[0]}")
+
+    round_id = np.full(n, -1, dtype=np.int64)
+    total = 0
+    for s, r in enumerate(rounds):
+        round_id[r] = s
+        total += len(r)
+    if total != n or (round_id < 0).any():
+        raise ValueError("rounds must partition the rows exactly once")
+    row_of = np.repeat(np.arange(n), lens)
+    strict = indices < row_of
+    if not np.all(round_id[indices[strict]] < round_id[row_of[strict]]):
+        raise ValueError("rounds are not dependency-ordered: some row has a "
+                         "lower neighbor in the same or a later round")
+
+    # --- step schedule: step(entry) = step_base[round(row)] + offset -------
+    maxlen = np.fromiter((lens[r].max() if len(r) else 0 for r in rounds),
+                         dtype=np.int64, count=len(rounds))
+    step_base = np.concatenate([[0], np.cumsum(maxlen)])
+    n_steps = int(step_base[-1])
+    offs = ragged_arange(lens)
+    step_of = step_base[round_id[row_of]] + offs
+    isdiag = indices == row_of
+
+    # entries ordered by (step, off-diagonals-before-diagonals, position):
+    # single composite key + stable sort (position order is preserved)
+    ent_order = np.argsort((step_of * 2 + isdiag).astype(np.int32),
+                           kind="stable")
+    ent_counts = np.bincount(step_of, minlength=n_steps)
+    ent_indptr = np.concatenate([[0], np.cumsum(ent_counts)])
+    # local index of every entry position within its step
+    local_of_pos = np.empty(nnz, dtype=np.int32)
+    local_of_pos[ent_order] = ragged_arange(ent_counts, dtype=np.int32)
+
+    # --- inner-product pairs: for entry (i, j) at offset t, every shared
+    # k < j contributes l_ik (offset s2 < t of row i) * l_jk (row j).
+    # candidates: a target at CSR position p (in-row offset t) pairs with
+    # its row's earlier entries — the contiguous positions p-t .. p-1.  One
+    # ragged enumeration replaces any per-(t, s2) Python loop, int32 when
+    # the candidate count allows (halves the memory traffic), int64 beyond;
+    # enumerating the targets in STEP-MAJOR order (ent_order) makes the
+    # surviving pairs come out already grouped by step — target-major,
+    # sources ascending, i.e. the one order that matters: pairs of any
+    # single target stay k-ascending, the sequential merge order — so no
+    # post-hoc sort is needed.
+    n_cand = int(offs.sum())
+    if n_cand:
+        cdt = (np.int32 if max(n_cand, nnz) < np.iinfo(np.int32).max
+               else np.int64)
+        entc = ent_order.astype(cdt)
+        offs_sm = offs.astype(cdt)[ent_order]        # offsets, step-major
+        pt = np.repeat(entc, offs_sm)
+        seq = ragged_arange(offs_sm, dtype=cdt)
+        pa = np.repeat(entc - offs_sm, offs_sm) + seq
+        # (j, k) -> position lookup: one binary search over the globally
+        # sorted key row*n + col
+        key_dt = np.int32 if n * n < np.iinfo(np.int32).max else np.int64
+        idxk = indices.astype(key_dt)
+        nk = key_dt(n)
+        keys = row_of.astype(key_dt) * nk + idxk
+        key = idxk[pt] * nk + idxk[pa]
+        q = np.searchsorted(keys, key).astype(cdt)
+        ok = np.flatnonzero((q < nnz)
+                            & (keys[np.minimum(q, nnz - 1)] == key))
+        pt, pa, pb = pt[ok], pa[ok], q[ok]
+        pair_counts = np.bincount(step_of[pt], minlength=n_steps)
+    else:
+        pt = pa = pb = np.zeros(0, dtype=np.int64)
+        pair_counts = np.zeros(n_steps, dtype=np.int64)
+    pair_indptr = np.concatenate([[0], np.cumsum(pair_counts)])
+    pair_tgt = local_of_pos[pt]
+
+    # pa/pb interleaved per step ([pa_s | pb_s] at [2*p0, 2*p1)) so the
+    # numeric sweep gathers both product operands with ONE fancy index per
+    # step; built with a single ragged scatter, sliced as views below
+    n_pairs = len(pt)
+    pab = np.empty(2 * n_pairs, dtype=pt.dtype if n_pairs else np.int64)
+    if n_pairs:
+        rag = ragged_arange(pair_counts)
+        base = np.repeat(2 * pair_indptr[:-1], pair_counts) + rag
+        pab[base] = pa
+        pab[base + np.repeat(pair_counts, pair_counts)] = pb
+
+    # --- assemble the per-step work lists ----------------------------------
+    ent_pos = ent_order
+    ent_dep = indices[ent_order].astype(np.int32)
+    off_counts = np.bincount(step_of[~isdiag], minlength=n_steps).tolist()
+    ei = ent_indptr.tolist()
+    pi = pair_indptr.tolist()
+    steps = []
+    for s in range(n_steps):
+        e0, e1 = ei[s], ei[s + 1]
+        n_off = off_counts[s]
+        p0, p1 = pi[s], pi[s + 1]
+        if p1 > p0:
+            steps.append((ent_pos[e0:e1], n_off, ent_dep[e0:e0 + n_off],
+                          ent_dep[e0 + n_off:e1], pab[2 * p0:2 * p1],
+                          p1 - p0, pair_tgt[p0:p1]))
+        else:
+            steps.append((ent_pos[e0:e1], n_off, ent_dep[e0:e0 + n_off],
+                          ent_dep[e0 + n_off:e1], None, 0, None))
+
+    return IC0Structure(n=n, n_steps=n_steps, indptr=indptr, indices=indices,
+                        steps=steps)
+
+
+def ic0_refactor(st: IC0Structure, a: sp.spmatrix, shift: float = 0.0,
+                 breakdown_eps: float = 1e-13) -> sp.csr_matrix:
+    """Numeric-only factorization of a matrix matching ``st``'s pattern.
+
+    This is the refactor path of ``SolverPlan``: same sparsity structure,
+    new values — no ordering, no symbolic analysis, just the vectorized
+    per-step sweep.  Raises ValueError if the pattern differs.
+    """
+    a = sp.csr_matrix(a)
+    low = sp.tril(a, format="csr")
+    low.sort_indices()
+    if (low.shape[0] != st.n
+            or not np.array_equal(low.indptr, st.indptr)
+            or not np.array_equal(low.indices, st.indices)):
+        raise ValueError("matrix sparsity pattern differs from the analyzed "
+                         "structure; rebuild the plan/structure instead")
+    data = low.data.astype(np.float64, copy=True)
+    if shift != 0.0:
+        dpos = st.indptr[1:] - 1
+        data[dpos] = data[dpos] * (1.0 + shift)
+
+    diag_l = np.empty(st.n, dtype=np.float64)
+    bincount, sqrt, maximum = np.bincount, np.sqrt, np.maximum
+    for pos, n_off, dep_off, rows_di, pab, npair, tgt in st.steps:
+        v = data[pos]
+        if pab is not None:
+            # bincount accumulates in input order == (target, k) sorted, so
+            # the partial sums match the sequential merge bit for bit
+            g = data[pab]
+            v = v - bincount(tgt, weights=g[:npair] * g[npair:],
+                             minlength=len(pos))
+        # breakdown guard: v <= eps -> eps (maximum is the same map)
+        sq = sqrt(maximum(v[n_off:], breakdown_eps))
+        data[pos[:n_off]] = v[:n_off] / diag_l[dep_off]
+        data[pos[n_off:]] = sq
+        diag_l[rows_di] = sq
+
+    return sp.csr_matrix((data, st.indices.copy(), st.indptr.copy()),
+                         shape=(st.n, st.n))
+
+
+def ic0_rounds(a: sp.spmatrix, rounds: list[np.ndarray], shift: float = 0.0,
+               breakdown_eps: float = 1e-13) -> sp.csr_matrix:
+    """Round-parallel IC(0): ``ic0`` computed as vectorized per-round batches.
+
+    Produces the same factor as the sequential ``ic0`` (same accumulation
+    order per entry — tested to tight tolerance across all orderings) in
+    ``sum_s max_rowlen(round_s)`` numpy steps instead of a per-entry Python
+    loop.  ``rounds`` are the forward rounds of any dependency-ordered
+    multi-color ordering (``sell.rounds_mc`` / ``rounds_bmc`` /
+    ``rounds_hbmc`` / ``rounds_natural``).
+    """
+    st = ic0_structure(a, rounds)
+    return ic0_refactor(st, a, shift=shift, breakdown_eps=breakdown_eps)
 
 
 def ic0_error(a: sp.spmatrix, l: sp.csr_matrix) -> float:

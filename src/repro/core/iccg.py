@@ -59,13 +59,19 @@ class PCGResult:
     history: np.ndarray   # relative residual norm per iteration (padded NaN)
 
 
-def pcg(spmv: Callable[[jax.Array], jax.Array],
-        precond: Callable[[jax.Array], jax.Array],
-        b: jax.Array,
-        rtol: float = 1e-7,
-        maxiter: int = 10_000,
-        record_history: bool = False) -> PCGResult:
-    """Standard PCG; runs fully on device, one while_loop iteration per CG step."""
+def _pcg_device(spmv: Callable[[jax.Array], jax.Array],
+                precond: Callable[[jax.Array], jax.Array],
+                b: jax.Array,
+                rtol: float = 1e-7,
+                maxiter: int = 10_000,
+                record_history: bool = False):
+    """Device core of ``pcg``: pure jax in / jax out, jittable.
+
+    ``rtol``/``maxiter``/``record_history`` are Python values (static under
+    jit).  Returns ``(x, iterations, relres, history)`` as jax arrays;
+    ``SolverPlan`` wraps this in a cached ``jax.jit`` so warm solves skip
+    retracing entirely.
+    """
     b = jnp.asarray(b)
     bnorm = jnp.linalg.norm(b)
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
@@ -105,7 +111,20 @@ def pcg(spmv: Callable[[jax.Array], jax.Array],
 
     state = (x0, r0, p0, rz0, rnorm0, jnp.asarray(0), hist0)
     x, r, _, _, rnorm, it, hist = jax.lax.while_loop(cond, body, state)
-    relres = float(rnorm / bnorm)
+    return x, it, rnorm / bnorm, hist
+
+
+def pcg(spmv: Callable[[jax.Array], jax.Array],
+        precond: Callable[[jax.Array], jax.Array],
+        b: jax.Array,
+        rtol: float = 1e-7,
+        maxiter: int = 10_000,
+        record_history: bool = False) -> PCGResult:
+    """Standard PCG; runs fully on device, one while_loop iteration per CG step."""
+    x, it, relres, hist = _pcg_device(spmv, precond, b, rtol=rtol,
+                                      maxiter=maxiter,
+                                      record_history=record_history)
+    relres = float(relres)
     return PCGResult(x=np.asarray(x), iterations=int(it), relres=relres,
                      converged=relres < rtol, history=np.asarray(hist))
 
@@ -121,34 +140,25 @@ class BatchedPCGResult:
     relres: np.ndarray      # (B,) final relative residual norms
     converged: np.ndarray   # (B,) bool
     n_steps: int            # while_loop trips = max(iterations)
+    # (maxiter+1, B) per-column relative residual norms (NaN once a column
+    # has converged — matching the single-RHS ``pcg`` histories column for
+    # column); empty when record_history=False
+    history: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0, 0)))
 
 
-def pcg_batched(spmv: Callable[[jax.Array], jax.Array],
-                precond: Callable[[jax.Array], jax.Array],
-                b: jax.Array,
-                rtol: float = 1e-7,
-                maxiter: int = 10_000) -> BatchedPCGResult:
-    """PCG over B right-hand sides in ONE device while_loop.
-
-    ``spmv`` and ``precond`` map (n, B) -> (n, B) column-wise (e.g.
-    ``spmv_ell_batched`` and ``HBMCPreconditioner.apply_batched``).
-
-    Per-RHS convergence masking: a column whose relative residual drops
-    below ``rtol`` gets ``alpha = beta = 0`` from then on, freezing its
-    ``x``/``r``/``p``/``rz`` exactly (0 * p adds exact zeros), while the
-    remaining columns keep iterating.  Each column therefore performs the
-    identical float sequence as a single-RHS ``pcg`` on that column, and
-    the per-RHS iteration counts match the single-RHS counts one for one.
-
-    The loop runs until every column has converged (or ``maxiter``): total
-    wall-clock is max(iterations) rounds, with the S sequential trisolve
-    rounds amortized over all live columns — the multi-RHS workload the
-    round-major kernel was built for.
-    """
+def _pcg_batched_device(spmv: Callable[[jax.Array], jax.Array],
+                        precond: Callable[[jax.Array], jax.Array],
+                        b: jax.Array,
+                        rtol: float = 1e-7,
+                        maxiter: int = 10_000,
+                        record_history: bool = False):
+    """Device core of ``pcg_batched``; returns jax arrays, jittable."""
     b = jnp.asarray(b)
     if b.ndim != 2:
         raise ValueError(f"pcg_batched expects b of shape (n, B), got "
                          f"{b.shape}")
+    nb = b.shape[1]
     bnorm = jnp.linalg.norm(b, axis=0)
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
 
@@ -160,15 +170,20 @@ def pcg_batched(spmv: Callable[[jax.Array], jax.Array],
     z0 = precond(r0)
     p0 = z0
     rz0 = jnp.einsum("nb,nb->b", r0, z0)
-    active0 = relres_of(r0) >= rtol
-    iters0 = jnp.zeros(b.shape[1], dtype=jnp.int32)
+    relres0 = relres_of(r0)
+    active0 = relres0 >= rtol
+    iters0 = jnp.zeros(nb, dtype=jnp.int32)
+    hist0 = (jnp.full((maxiter + 1, nb), jnp.nan, dtype=b.dtype)
+             if record_history else jnp.zeros((0, nb), dtype=b.dtype))
+    if record_history:
+        hist0 = hist0.at[0].set(relres0)
 
     def cond(state):
-        _, _, _, _, active, _, step = state
+        _, _, _, _, active, _, step, _ = state
         return jnp.any(active) & (step < maxiter)
 
     def body(state):
-        x, r, p, rz, active, iters, step = state
+        x, r, p, rz, active, iters, step, hist = state
         ap = spmv(p)
         pap = jnp.einsum("nb,nb->b", p, ap)
         alpha = jnp.where(active, rz / pap, 0.0)
@@ -180,12 +195,57 @@ def pcg_batched(spmv: Callable[[jax.Array], jax.Array],
         p = jnp.where(active[None, :], z + beta[None, :] * p, p)
         rz = jnp.where(active, rz_new, rz)
         iters = iters + active.astype(jnp.int32)
-        active = active & (relres_of(r) >= rtol)
-        return (x, r, p, rz, active, iters, step + 1)
+        relres = relres_of(r)
+        if record_history:
+            # a column records its residual at row == its own iteration
+            # count while active; frozen columns keep their NaN padding,
+            # matching the single-RHS history shape one for one
+            lanes = jnp.arange(nb)
+            hist = hist.at[iters, lanes].set(
+                jnp.where(active, relres, hist[iters, lanes]))
+        active = active & (relres >= rtol)
+        return (x, r, p, rz, active, iters, step + 1, hist)
 
-    state = (x0, r0, p0, rz0, active0, iters0, jnp.asarray(0))
-    x, r, _, _, _, iters, step = jax.lax.while_loop(cond, body, state)
-    relres = np.asarray(relres_of(r))
+    state = (x0, r0, p0, rz0, active0, iters0, jnp.asarray(0), hist0)
+    x, r, _, _, _, iters, step, hist = jax.lax.while_loop(cond, body, state)
+    return x, iters, relres_of(r), step, hist
+
+
+def pcg_batched(spmv: Callable[[jax.Array], jax.Array],
+                precond: Callable[[jax.Array], jax.Array],
+                b: jax.Array,
+                rtol: float = 1e-7,
+                maxiter: int = 10_000,
+                record_history: bool = False) -> BatchedPCGResult:
+    """PCG over B right-hand sides in ONE device while_loop.
+
+    ``spmv`` and ``precond`` map (n, B) -> (n, B) column-wise (e.g.
+    ``spmv_ell_batched`` and ``HBMCPreconditioner.apply_batched``).
+
+    Per-RHS convergence masking: a column whose relative residual drops
+    below ``rtol`` gets ``alpha = beta = 0`` from then on, freezing its
+    ``x``/``r``/``p``/``rz`` exactly (0 * p adds exact zeros), while the
+    remaining columns keep iterating.  Each column therefore performs the
+    same arithmetic sequence as a single-RHS ``pcg`` on that column up to
+    XLA's reduction-order rounding, and the per-RHS iteration counts match
+    the single-RHS counts one for one.
+
+    ``record_history=True`` additionally returns per-column residual
+    histories ((maxiter+1, B), NaN-padded): column j's history is frozen
+    the moment it converges, matching the single-RHS ``pcg`` history of
+    that column in shape and NaN pattern exactly and in values up to
+    reduction-order rounding (the batched dots reduce via
+    ``einsum('nb,nb->b')`` rather than ``vdot``).
+
+    The loop runs until every column has converged (or ``maxiter``): total
+    wall-clock is max(iterations) rounds, with the S sequential trisolve
+    rounds amortized over all live columns — the multi-RHS workload the
+    round-major kernel was built for.
+    """
+    x, iters, relres, step, hist = _pcg_batched_device(
+        spmv, precond, b, rtol=rtol, maxiter=maxiter,
+        record_history=record_history)
+    relres = np.asarray(relres)
     return BatchedPCGResult(x=np.asarray(x), iterations=np.asarray(iters),
                             relres=relres, converged=relres < rtol,
-                            n_steps=int(step))
+                            n_steps=int(step), history=np.asarray(hist))

@@ -1,0 +1,507 @@
+"""Reusable solver plan: factor once, solve many (the setup pipeline).
+
+``SolverPlan`` owns everything ``solve_iccg`` used to rebuild from scratch
+on every call:
+
+    ordering            MC / BMC / HBMC permutation + padded system
+    rounds              execution-ordered independent row sets
+    IC(0) structure     pattern-only analysis (``ic0_structure``)
+    IC(0) factor        round-parallel numeric phase (``ic0_refactor``)
+    packed tables       vectorized ``pack_factor`` + fused round-major form
+    SpMV operand        ELL / SELL packing of the (round-major) matrix
+    jitted PCG          one cached ``jax.jit`` per (batched, rtol, maxiter,
+                        record_history) signature
+
+``plan.solve(b)`` / ``plan.solve_batched(B)`` perform ZERO host-side setup:
+the only per-solve host work is embedding ``b`` into the solve layout and
+extracting ``x`` back out.  ``plan.refactor(a_new)`` re-runs only the
+numeric factorization + numeric repack for a matrix with the identical
+sparsity pattern (the implicit time-stepping workload — see
+``examples/timestepping.py``), skipping ordering, rounds, and symbolic
+analysis entirely.
+
+``solve_iccg`` / ``solve_iccg_batched`` (core/solvers.py) are thin wrappers:
+build a plan, solve once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+from . import sell
+from .coloring import block_multicolor_ordering, multicolor_ordering, pad_system
+from .graph import permute_system
+from .hbmc import hbmc_from_bmc, pad_system_hbmc
+from .ic0 import ic0_refactor, ic0_structure
+from .iccg import (BatchedPCGResult, PCGResult, _pcg_batched_device,
+                   _pcg_device, spmv_ell, spmv_ell_batched, spmv_sell,
+                   spmv_sell_batched)
+from .trisolve import (BACKENDS, LAYOUTS, HBMCPreconditioner,
+                       RoundMajorPreconditioner,
+                       build_preconditioner_from_rounds,
+                       build_round_major_preconditioner_from_rounds)
+
+
+@dataclasses.dataclass
+class ICCGReport:
+    method: str
+    result: PCGResult       # result.x is in the caller's (original) ordering
+    n: int
+    n_padded: int
+    n_colors: int
+    n_rounds: int           # sequential rounds per triangular solve
+    setup_seconds: float
+    solve_seconds: float
+    lane_occupancy: float   # mean live lanes / padded lanes per round
+    x: np.ndarray           # solution in ORIGINAL ordering (== result.x)
+    backend: str = "xla"
+    layout: str = "round_major"
+
+
+@dataclasses.dataclass
+class BatchedICCGReport:
+    method: str
+    result: BatchedPCGResult  # result.x is (n, B) in the caller's ordering
+    n: int
+    n_padded: int
+    n_colors: int
+    n_rounds: int
+    setup_seconds: float
+    solve_seconds: float
+    lane_occupancy: float
+    x: np.ndarray           # (n, B) solutions in ORIGINAL ordering (== result.x)
+    backend: str = "xla"
+    layout: str = "round_major"
+
+
+@dataclasses.dataclass
+class SetupBreakdown:
+    """Host-side setup wall-clock, by pipeline stage (seconds)."""
+    ordering: float
+    factor: float           # IC(0): structure analysis + numeric phase
+    pack: float             # step packing + fuse + SpMV operand + transfer
+    total: float
+
+
+@dataclasses.dataclass
+class _System:
+    """Ordered/padded system plus everything needed to run + undo it."""
+    a_bar: sp.csr_matrix
+    b_bar: np.ndarray | None
+    perm: np.ndarray        # original index -> padded-ordered index
+    n: int
+    n_padded: int
+    n_colors: int
+    fwd_rounds: list
+    bwd_rounds: list
+    drop: np.ndarray | None
+    # re-applies the SAME ordering to a new matrix (refactor path)
+    apply_ordering: Callable[[sp.spmatrix], sp.csr_matrix] | None = None
+
+
+def _order_system(a: sp.csr_matrix, b: np.ndarray | None, method: str,
+                  block_size: int, w: int) -> _System:
+    n = a.shape[0]
+    if method == "mc":
+        mc = multicolor_ordering(a)
+        a_bar, b_bar = permute_system(a, b, mc.perm)
+        return _System(a_bar, b_bar, mc.perm, n, n, mc.n_colors,
+                       sell.rounds_mc(mc, reverse=False),
+                       sell.rounds_mc(mc, reverse=True), None,
+                       lambda a2: permute_system(a2, None, mc.perm)[0])
+    if method == "bmc":
+        bmc = block_multicolor_ordering(a, block_size)
+        a_bar, b_bar = pad_system(a, b, bmc)
+        return _System(a_bar, b_bar, bmc.perm, n, bmc.n_padded, bmc.n_colors,
+                       sell.rounds_bmc(bmc, reverse=False),
+                       sell.rounds_bmc(bmc, reverse=True), bmc.is_dummy,
+                       lambda a2: pad_system(a2, None, bmc)[0])
+    if method == "hbmc":
+        bmc = block_multicolor_ordering(a, block_size)
+        hb = hbmc_from_bmc(bmc, w)
+        a_bar, b_bar = pad_system_hbmc(a, b, hb)
+        return _System(a_bar, b_bar, hb.perm, n, hb.n_final, hb.n_colors,
+                       sell.rounds_hbmc(hb, reverse=False),
+                       sell.rounds_hbmc(hb, reverse=True), hb.is_dummy,
+                       lambda a2: pad_system_hbmc(a2, None, hb)[0])
+    if method == "natural":
+        return _System(a, b, np.arange(n), n, n, n,
+                       sell.rounds_natural(n, reverse=False),
+                       sell.rounds_natural(n, reverse=True), None,
+                       lambda a2: sp.csr_matrix(a2))
+    raise ValueError(f"unknown method {method!r}")
+
+
+def _pack_spmv(a_op: sp.spmatrix, spmv_format: str, w: int, dtype
+               ) -> tuple[jax.Array, jax.Array, int]:
+    """Pack a matrix for SpMV; returns (vals, cols, n) device operands."""
+    if spmv_format == "sell":
+        sm = sell.pack_sell(a_op, w)
+        return (jnp.asarray(sm.vals, dtype=dtype), jnp.asarray(sm.cols),
+                sm.n)
+    cols_h, vals_h = sell.pack_ell(a_op)
+    return (jnp.asarray(vals_h, dtype=dtype), jnp.asarray(cols_h),
+            a_op.shape[0])
+
+
+def _make_spmv(spmv_format: str, n: int, vals, cols,
+               batched: bool) -> Callable:
+    """SpMV closure over (possibly traced) packed operands."""
+    if spmv_format == "sell":
+        if batched:
+            return lambda x: spmv_sell_batched(vals, cols, x, n)
+        return lambda x: spmv_sell(vals, cols, x, n)
+    if batched:
+        return lambda x: spmv_ell_batched(vals, cols, x)
+    return lambda x: spmv_ell(vals, cols, x)
+
+
+def _build_spmv_ops(a_op: sp.spmatrix, spmv_format: str, w: int, dtype
+                    ) -> tuple[Callable, Callable]:
+    """Pack a matrix for SpMV; returns (single-RHS, multi-RHS) closures
+    sharing one set of device operands."""
+    vals, cols, n = _pack_spmv(a_op, spmv_format, w, dtype)
+    return (_make_spmv(spmv_format, n, vals, cols, batched=False),
+            _make_spmv(spmv_format, n, vals, cols, batched=True))
+
+
+def _build_preconditioner(l_bar, sysd: _System, dtype, backend: str,
+                          interpret: bool | None, layout: str):
+    """Factor -> preconditioner (+ layout object for round_major)."""
+    if layout == "round_major":
+        return build_round_major_preconditioner_from_rounds(
+            l_bar, sysd.fwd_rounds, sysd.bwd_rounds, drop_mask=sysd.drop,
+            dtype=dtype, backend=backend, interpret=interpret)
+    return build_preconditioner_from_rounds(
+        l_bar, sysd.fwd_rounds, sysd.bwd_rounds, drop_mask=sysd.drop,
+        dtype=dtype, backend=backend, interpret=interpret), None
+
+
+def _occupancy_from_rounds(rounds, drop) -> float:
+    if drop is not None:
+        rounds = [r[~drop[r]] for r in rounds]
+        rounds = [r for r in rounds if len(r)]
+    live = np.array([len(r) for r in rounds], dtype=np.float64)
+    rmax = live.max(initial=1.0)
+    return float(np.mean(live / rmax)) if len(live) else 1.0
+
+
+class SolverPlan:
+    """Factor-once / solve-many ICCG plan (see module docstring).
+
+    Build with ``build_plan(a, ...)`` (or the constructor directly).  The
+    plan caches the ordering, rounds, IC(0) structure, fused round-major
+    tables, packed SpMV operand and jitted PCG; ``solve``/``solve_batched``
+    reuse all of it, ``refactor`` renews only the numeric parts.
+
+    ``setup_count`` counts host-side setup passes (initial build and every
+    ``refactor``); it must NOT change across ``solve`` calls — asserted by
+    tests/test_setup_plan.py.
+    """
+
+    def __init__(self, a: sp.spmatrix, method: str = "hbmc",
+                 block_size: int = 32, w: int = 8, shift: float = 0.0,
+                 spmv_format: str = "ell", dtype=jnp.float64,
+                 backend: str = "xla", interpret: bool | None = None,
+                 layout: str = "round_major"):
+        if layout not in LAYOUTS:
+            raise ValueError(f"unknown layout {layout!r}; expected one of "
+                             f"{LAYOUTS}")
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; expected one of "
+                             f"{BACKENDS}")
+        self.method = method
+        self.block_size = block_size
+        self.w = w
+        self.shift = shift
+        self.spmv_format = spmv_format
+        self.dtype = dtype
+        self.backend = backend
+        self.interpret = interpret
+        self.layout = layout
+        self._np_dtype = np.dtype(jnp.dtype(dtype))
+        self._pcg_cache: dict[tuple, Any] = {}
+        self.setup_count = 0
+        self.refactor_count = 0
+        # bumped only while a PCG signature is being (re)traced
+        self._trace_count = 0
+
+        a = sp.csr_matrix(a)
+        a.sort_indices()
+        # original pattern kept for the refactor structure check
+        self._a_indptr = a.indptr.copy()
+        self._a_indices = a.indices.copy()
+
+        t0 = time.perf_counter()
+        self._sysd = _order_system(a, None, method, block_size, w)
+        t1 = time.perf_counter()
+        self._structure = ic0_structure(self._sysd.a_bar,
+                                        self._sysd.fwd_rounds)
+        l_bar = ic0_refactor(self._structure, self._sysd.a_bar, shift=shift)
+        t2 = time.perf_counter()
+        self._build_operators(l_bar)
+        t3 = time.perf_counter()
+        self.timings = SetupBreakdown(ordering=t1 - t0, factor=t2 - t1,
+                                      pack=t3 - t2, total=t3 - t0)
+        self.setup_count += 1
+        self.lane_occupancy = _occupancy_from_rounds(self._sysd.fwd_rounds,
+                                                     self._sysd.drop)
+
+    # -- derived properties -------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self._sysd.n
+
+    @property
+    def n_padded(self) -> int:
+        return self._sysd.n_padded
+
+    @property
+    def n_colors(self) -> int:
+        return self._sysd.n_colors
+
+    @property
+    def n_rounds(self) -> int:
+        return self._precond.n_rounds
+
+    # -- setup internals ----------------------------------------------------
+
+    @property
+    def _operands_as_args(self) -> bool:
+        """Whether the jitted PCG takes factor/SpMV operands as (pytree)
+        ARGUMENTS — then a ``refactor`` swaps device arrays of identical
+        shape without any retrace.  True for every path except
+        layout="index" + backend="pallas" (whose kernel preconditioner is
+        not a pytree; its jit closes over the operands and is rebuilt on
+        refactor)."""
+        return self.layout == "round_major" or self.backend == "xla"
+
+    def _build_operators(self, l_bar) -> None:
+        """Pack the factor + SpMV operand and move them to device."""
+        self._precond, self._rm = _build_preconditioner(
+            l_bar, self._sysd, self.dtype, self.backend, self.interpret,
+            self.layout)
+        a_op = (sell.permute_round_major(self._sysd.a_bar, self._rm)
+                if self._rm is not None else self._sysd.a_bar)
+        self._spmv_vals, self._spmv_cols, self._spmv_n = _pack_spmv(
+            a_op, self.spmv_format, self.w, self.dtype)
+        if not self._operands_as_args:
+            self._pcg_cache.clear()   # closed-over operands -> retrace
+
+    def refactor(self, a_new: sp.spmatrix) -> SetupBreakdown:
+        """Renew the factorization for a structure-identical matrix.
+
+        Re-runs the value-dependent pipeline — permute values,
+        round-parallel IC(0) *numeric* phase over the cached structure, and
+        the (vectorized, O(nnz)) repack + device transfer — while ordering,
+        rounds, layout and the IC(0) symbolic analysis stay cached and the
+        jitted PCG is reused without a retrace (operands are traced
+        arguments).  Raises ValueError if ``a_new``'s sparsity pattern
+        differs.
+        """
+        a_new = sp.csr_matrix(a_new)
+        a_new.sort_indices()
+        if (a_new.shape[0] != self.n
+                or not np.array_equal(a_new.indptr, self._a_indptr)
+                or not np.array_equal(a_new.indices, self._a_indices)):
+            raise ValueError("refactor requires a structure-identical "
+                             "matrix (same sparsity pattern); build a new "
+                             "plan instead")
+        t0 = time.perf_counter()
+        a_bar = self._sysd.apply_ordering(a_new)
+        self._sysd.a_bar = a_bar
+        l_bar = ic0_refactor(self._structure, a_bar, shift=self.shift)
+        t1 = time.perf_counter()
+        self._build_operators(l_bar)
+        t2 = time.perf_counter()
+        self.setup_count += 1
+        self.refactor_count += 1
+        return SetupBreakdown(ordering=0.0, factor=t1 - t0, pack=t2 - t1,
+                              total=t2 - t0)
+
+    # -- solving ------------------------------------------------------------
+
+    def _pcg_fn(self, batched: bool, rtol: float, maxiter: int,
+                record_history: bool):
+        key = (batched, float(rtol), int(maxiter), bool(record_history))
+        fn = self._pcg_cache.get(key)
+        if fn is not None:
+            return fn
+        # rtol/maxiter/record_history are baked in as Python constants; the
+        # jitted wrapper is cached so warm solves never retrace, and (where
+        # _operands_as_args) the factor/SpMV operands are traced ARGUMENTS
+        # so refactor never retraces either.  self._trace_count increments
+        # only while tracing — tests assert refactor stays at one trace.
+        core = _pcg_batched_device if batched else _pcg_device
+        fmt, n_op = self.spmv_format, self._spmv_n
+        backend, interpret = self.backend, self.interpret
+
+        if self.layout == "round_major":
+            def run(tables, sv, sc, b):
+                self._trace_count += 1
+                pre = RoundMajorPreconditioner(tables=tables,
+                                               backend=backend,
+                                               interpret=interpret)
+                apply_ = pre.apply_batched if batched else pre
+                spmv = _make_spmv(fmt, n_op, sv, sc, batched)
+                return core(spmv, apply_, b, rtol=rtol, maxiter=maxiter,
+                            record_history=record_history)
+            fn = jax.jit(run)
+        elif backend == "xla":
+            n_final = self.n_padded
+
+            def run(fwd, bwd, sv, sc, b):
+                self._trace_count += 1
+                pre = HBMCPreconditioner(fwd=fwd, bwd=bwd, n_final=n_final,
+                                         backend="xla", kernel=None)
+                apply_ = pre.apply_batched if batched else pre
+                spmv = _make_spmv(fmt, n_op, sv, sc, batched)
+                return core(spmv, apply_, b, rtol=rtol, maxiter=maxiter,
+                            record_history=record_history)
+            fn = jax.jit(run)
+        else:
+            # index + pallas: the kernel preconditioner is not a pytree, so
+            # the operands are closure constants (cache cleared on refactor)
+            pre = self._precond
+            apply_ = pre.apply_batched if batched else pre
+            spmv = _make_spmv(fmt, n_op, self._spmv_vals, self._spmv_cols,
+                              batched)
+
+            def run(b):
+                self._trace_count += 1
+                return core(spmv, apply_, b, rtol=rtol, maxiter=maxiter,
+                            record_history=record_history)
+            fn = jax.jit(run)
+        self._pcg_cache[key] = fn
+        return fn
+
+    def _run_pcg(self, batched: bool, rtol: float, maxiter: int,
+                 record_history: bool, b_dev: jax.Array):
+        fn = self._pcg_fn(batched, rtol, maxiter, record_history)
+        if self.layout == "round_major":
+            return fn(self._precond.tables, self._spmv_vals,
+                      self._spmv_cols, b_dev)
+        if self.backend == "xla":
+            return fn(self._precond.fwd, self._precond.bwd,
+                      self._spmv_vals, self._spmv_cols, b_dev)
+        return fn(b_dev)
+
+    def _embed(self, b_bar: np.ndarray) -> jax.Array:
+        b_host = self._rm.embed(b_bar) if self._rm is not None else b_bar
+        return jnp.asarray(b_host, dtype=self.dtype)
+
+    def _extract(self, x_dev) -> np.ndarray:
+        x_bar = (self._rm.extract(np.asarray(x_dev))
+                 if self._rm is not None else np.asarray(x_dev))
+        return np.asarray(x_bar[self._sysd.perm])
+
+    def solve(self, b: np.ndarray, rtol: float = 1e-7,
+              maxiter: int = 10_000,
+              record_history: bool = False) -> ICCGReport:
+        """Solve A x = b reusing every cached setup product.
+
+        Per-call host work is exactly: embed ``b`` into the solve layout,
+        extract ``x`` back into the caller's ordering.
+        """
+        t0 = time.perf_counter()
+        b = np.asarray(b, dtype=self._np_dtype)
+        if b.shape != (self.n,):
+            raise ValueError(f"plan.solve expects b of shape ({self.n},), "
+                             f"got {b.shape}")
+        b_bar = np.zeros(self.n_padded, dtype=self._np_dtype)
+        b_bar[self._sysd.perm] = b
+        b_dev = self._embed(b_bar)
+        t1 = time.perf_counter()
+        x, it, relres, hist = self._run_pcg(False, rtol, maxiter,
+                                            record_history, b_dev)
+        x = jax.block_until_ready(x)
+        t2 = time.perf_counter()
+        x_out = self._extract(x)
+        relres = float(relres)
+        res = PCGResult(x=x_out, iterations=int(it), relres=relres,
+                        converged=relres < rtol, history=np.asarray(hist))
+        return ICCGReport(
+            method=self.method, result=res, n=self.n,
+            n_padded=self.n_padded, n_colors=self.n_colors,
+            n_rounds=self.n_rounds, setup_seconds=t1 - t0,
+            solve_seconds=t2 - t1, lane_occupancy=self.lane_occupancy,
+            x=x_out, backend=self.backend, layout=self.layout)
+
+    def solve_batched(self, b: np.ndarray, rtol: float = 1e-7,
+                      maxiter: int = 10_000,
+                      record_history: bool = False) -> BatchedICCGReport:
+        """Solve A x_j = b_j for all columns of ``b`` ((n, B)) in one PCG
+        loop, reusing every cached setup product."""
+        t0 = time.perf_counter()
+        b = np.asarray(b, dtype=self._np_dtype)
+        if b.ndim != 2 or b.shape[0] != self.n:
+            raise ValueError(f"plan.solve_batched expects b of shape "
+                             f"({self.n}, B), got {b.shape}")
+        b_bar = np.zeros((self.n_padded, b.shape[1]), dtype=self._np_dtype)
+        b_bar[self._sysd.perm] = b
+        b_dev = self._embed(b_bar)
+        t1 = time.perf_counter()
+        x, iters, relres, step, hist = self._run_pcg(True, rtol, maxiter,
+                                                     record_history, b_dev)
+        x = jax.block_until_ready(x)
+        t2 = time.perf_counter()
+        x_out = self._extract(x)
+        relres = np.asarray(relres)
+        res = BatchedPCGResult(x=x_out, iterations=np.asarray(iters),
+                               relres=relres, converged=relres < rtol,
+                               n_steps=int(step), history=np.asarray(hist))
+        return BatchedICCGReport(
+            method=self.method, result=res, n=self.n,
+            n_padded=self.n_padded, n_colors=self.n_colors,
+            n_rounds=self.n_rounds, setup_seconds=t1 - t0,
+            solve_seconds=t2 - t1, lane_occupancy=self.lane_occupancy,
+            x=x_out, backend=self.backend, layout=self.layout)
+
+
+def build_plan(a: sp.spmatrix, method: str = "hbmc", block_size: int = 32,
+               w: int = 8, shift: float = 0.0, spmv_format: str = "ell",
+               dtype=jnp.float64, backend: str = "xla",
+               interpret: bool | None = None,
+               layout: str = "round_major") -> SolverPlan:
+    """One-time setup: ordering -> round-parallel IC(0) -> packed operators.
+
+    Returns a ``SolverPlan`` whose ``solve`` / ``solve_batched`` /
+    ``refactor`` amortize this cost over arbitrarily many solves.
+    """
+    return SolverPlan(a, method=method, block_size=block_size, w=w,
+                      shift=shift, spmv_format=spmv_format, dtype=dtype,
+                      backend=backend, interpret=interpret, layout=layout)
+
+
+# ---------------------------------------------------------------------------
+# Operator-building shim kept for benchmarks (pre-plan API surface).
+# ---------------------------------------------------------------------------
+
+def _build_operators(sysd: _System, shift: float, spmv_format: str, w: int,
+                     dtype, backend: str, interpret: bool | None,
+                     layout: str, batched: bool):
+    """IC(0) + preconditioner + SpMV in the requested layout.
+
+    Returns ``(precond, spmv_fn, rm_layout)`` exactly as the pre-plan
+    solver did; ``benchmarks/bench_trisolve.py`` uses it to time raw
+    operator applies.  The factorization runs through the round-parallel
+    path (``ic0_rounds`` semantics).
+    """
+    if layout not in LAYOUTS:
+        raise ValueError(f"unknown layout {layout!r}; expected one of "
+                         f"{LAYOUTS}")
+    st = ic0_structure(sysd.a_bar, sysd.fwd_rounds)
+    l_bar = ic0_refactor(st, sysd.a_bar, shift=shift)
+    precond, rm = _build_preconditioner(l_bar, sysd, dtype, backend,
+                                        interpret, layout)
+    a_op = sell.permute_round_major(sysd.a_bar, rm) if rm is not None \
+        else sysd.a_bar
+    single, batched_fn = _build_spmv_ops(a_op, spmv_format, w, dtype)
+    return precond, (batched_fn if batched else single), rm

@@ -25,6 +25,7 @@ import dataclasses
 import numpy as np
 import scipy.sparse as sp
 
+from .graph import ragged_arange
 from .hbmc import HBMCOrdering
 
 
@@ -117,24 +118,31 @@ def pack_steps(tri: sp.csr_matrix, diag: np.ndarray,
         rounds = [r[~drop_mask[r]] for r in rounds]
         rounds = [r for r in rounds if len(r)]
     S = len(rounds)
-    R = max(len(r) for r in rounds)
-    K = int(np.diff(tri.indptr).max(initial=0))
+    rlens = np.array([len(r) for r in rounds], dtype=np.int64)
+    R = int(rlens.max(initial=0))
+    row_nnz = np.diff(tri.indptr)
+    K = int(row_nnz.max(initial=0))
     K = max(K, 1)
+    # one flat scatter instead of a per-row Python loop: lane (s, t) holds
+    # round s's t-th row; its nnz entries land at [(s*R + t)*K, ... + nnz)
+    all_rows = np.concatenate(rounds).astype(np.int64)
+    s_idx = np.repeat(np.arange(S), rlens)
+    t_idx = ragged_arange(rlens)
     rows = np.full((S, R), n_slots - 1, dtype=np.int32)
-    cols = np.full((S, R, K), n_slots - 1, dtype=np.int32)
-    vals = np.zeros((S, R, K), dtype=np.float64)
     dinv = np.zeros((S, R), dtype=np.float64)
-    live = np.zeros(S, dtype=np.int32)
-    for s, rset in enumerate(rounds):
-        live[s] = len(rset)
-        rows[s, :len(rset)] = rset
-        dinv[s, :len(rset)] = 1.0 / diag[rset]
-        for t, r in enumerate(rset):
-            lo, hi = tri.indptr[r], tri.indptr[r + 1]
-            cols[s, t, :hi - lo] = tri.indices[lo:hi]
-            vals[s, t, :hi - lo] = tri.data[lo:hi]
-    return StepTables(rows=rows, cols=cols, vals=vals, dinv=dinv,
-                      n_slots=n_slots, live=live)
+    rows[s_idx, t_idx] = all_rows
+    dinv[s_idx, t_idx] = 1.0 / diag[all_rows]
+    counts = row_nnz[all_rows]
+    k_off = ragged_arange(counts)
+    src = np.repeat(tri.indptr[all_rows], counts) + k_off
+    dst = np.repeat((s_idx * R + t_idx) * K, counts) + k_off
+    cols = np.full(S * R * K, n_slots - 1, dtype=np.int32)
+    vals = np.zeros(S * R * K, dtype=np.float64)
+    cols[dst] = tri.indices[src]
+    vals[dst] = tri.data[src]
+    return StepTables(rows=rows, cols=cols.reshape(S, R, K),
+                      vals=vals.reshape(S, R, K), dinv=dinv,
+                      n_slots=n_slots, live=rlens.astype(np.int32))
 
 
 def pack_factor(l_final: sp.csr_matrix, fwd_rounds: list[np.ndarray],
@@ -367,6 +375,13 @@ class SellMatrix:
     nnz: int
 
 
+def _ell_scatter_indices(indptr: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(row, k) destination of every CSR nonzero, as one flat enumeration."""
+    lens = np.diff(indptr)
+    rows_of = np.repeat(np.arange(len(lens)), lens)
+    return rows_of, ragged_arange(lens)
+
+
 def pack_sell(a: sp.spmatrix, w: int) -> SellMatrix:
     a = sp.csr_matrix(a)
     a.sort_indices()
@@ -379,11 +394,9 @@ def pack_sell(a: sp.spmatrix, w: int) -> SellMatrix:
     max_k = int(max(slice_k.max(initial=0), 1))
     cols = np.zeros((n_slices, max_k, w), dtype=np.int32)
     vals = np.zeros((n_slices, max_k, w), dtype=np.float64)
-    for r in range(n):
-        s, lane = divmod(r, w)
-        lo, hi = a.indptr[r], a.indptr[r + 1]
-        cols[s, :hi - lo, lane] = a.indices[lo:hi]
-        vals[s, :hi - lo, lane] = a.data[lo:hi]
+    rows_of, k_off = _ell_scatter_indices(a.indptr)
+    cols[rows_of // w, k_off, rows_of % w] = a.indices
+    vals[rows_of // w, k_off, rows_of % w] = a.data
     return SellMatrix(cols=cols, vals=vals,
                       slice_k=slice_k.astype(np.int32), n=n, w=w,
                       padded_nnz=int(np.sum(slice_k) * w), nnz=a.nnz)
@@ -398,8 +411,7 @@ def pack_ell(a: sp.spmatrix) -> tuple[np.ndarray, np.ndarray]:
     k = max(k, 1)
     cols = np.zeros((n, k), dtype=np.int32)
     vals = np.zeros((n, k), dtype=np.float64)
-    for r in range(n):
-        lo, hi = a.indptr[r], a.indptr[r + 1]
-        cols[r, :hi - lo] = a.indices[lo:hi]
-        vals[r, :hi - lo] = a.data[lo:hi]
+    rows_of, k_off = _ell_scatter_indices(a.indptr)
+    cols[rows_of, k_off] = a.indices
+    vals[rows_of, k_off] = a.data
     return cols, vals

@@ -1,161 +1,35 @@
 """End-to-end parallel ICCG solvers: MC / BMC / HBMC (paper §5 solvers).
 
 ``solve_iccg(a, b, method=..., backend=..., layout=...)`` performs the full
-pipeline: ordering -> permuted (padded) system -> shifted IC(0) -> step
-packing -> device PCG -> solution mapped back to the original order.
+pipeline: ordering -> permuted (padded) system -> shifted round-parallel
+IC(0) -> vectorized step packing -> device PCG -> solution mapped back to
+the original order.  Both front-ends are thin wrappers over
+``core.plan.SolverPlan`` (build a plan, solve once); workloads that solve
+against one matrix repeatedly should hold the plan instead:
+
+    plan = build_plan(a, method="hbmc", block_size=16, w=8)
+    rep = plan.solve(b)            # zero host-side setup after the first
+    rep = plan.solve_batched(bb)   # (n, B) multi-RHS, same cached setup
+    plan.refactor(a_new)           # new values, same pattern: numeric only
+
 ``backend`` picks the triangular-solve implementation ("xla" substitution
 or the Pallas kernel); ``layout`` picks the coordinate system of the PCG
-loop:
+loop ("round_major" native hot loop, "index" the pre-refactor baseline).
 
-  * ``"round_major"`` (default) — the WHOLE loop (SpMV operands, both
-    triangular sweeps, all PCG state) lives in execution-order round-major
-    coordinates.  Permutation happens exactly twice per solve (b in, x
-    out); the preconditioner is one fused fwd+bwd pass.
-  * ``"index"`` — the pre-refactor path: state in permuted-matrix index
-    order, the solve layout re-gathered/scattered on every apply.  Kept as
-    the benchmark baseline and for the sharded path (core/partition.py).
-
-``solve_iccg_batched(a, b2d, ...)`` is the multi-RHS front-end: all B
-right-hand sides advance through ONE device while_loop with per-RHS
-convergence masking, sharing every gather of the packed tables.
+Reports carry the solution in the CALLER's ordering in both ``report.x``
+and ``report.result.x`` (shape (n,) / (n, B)); the internal padded
+round-major state never leaks out of the plan.
 """
 from __future__ import annotations
-
-import dataclasses
-import time
 
 import jax.numpy as jnp
 import numpy as np
 import scipy.sparse as sp
 
-from . import sell
-from .coloring import block_multicolor_ordering, multicolor_ordering, pad_system
-from .graph import permute_system
-from .hbmc import hbmc_from_bmc, pad_system_hbmc
-from .ic0 import ic0
-from .iccg import (BatchedPCGResult, PCGResult, pcg, pcg_batched, spmv_ell,
-                   spmv_ell_batched, spmv_sell, spmv_sell_batched)
-from .trisolve import (LAYOUTS, build_preconditioner_from_rounds,
-                       build_round_major_preconditioner_from_rounds)
-
-
-@dataclasses.dataclass
-class ICCGReport:
-    method: str
-    result: PCGResult
-    n: int
-    n_padded: int
-    n_colors: int
-    n_rounds: int           # sequential rounds per triangular solve
-    setup_seconds: float
-    solve_seconds: float
-    lane_occupancy: float   # mean live lanes / padded lanes per round
-    x: np.ndarray           # solution in ORIGINAL ordering
-    backend: str = "xla"
-    layout: str = "round_major"
-
-
-@dataclasses.dataclass
-class BatchedICCGReport:
-    method: str
-    result: BatchedPCGResult
-    n: int
-    n_padded: int
-    n_colors: int
-    n_rounds: int
-    setup_seconds: float
-    solve_seconds: float
-    lane_occupancy: float
-    x: np.ndarray           # (n, B) solutions in ORIGINAL ordering
-    backend: str = "xla"
-    layout: str = "round_major"
-
-
-@dataclasses.dataclass
-class _System:
-    """Ordered/padded system plus everything needed to run + undo it."""
-    a_bar: sp.csr_matrix
-    b_bar: np.ndarray | None
-    perm: np.ndarray        # original index -> padded-ordered index
-    n: int
-    n_padded: int
-    n_colors: int
-    fwd_rounds: list
-    bwd_rounds: list
-    drop: np.ndarray | None
-
-
-def _order_system(a: sp.csr_matrix, b: np.ndarray | None, method: str,
-                  block_size: int, w: int) -> _System:
-    n = a.shape[0]
-    if method == "mc":
-        mc = multicolor_ordering(a)
-        a_bar, b_bar = permute_system(a, b, mc.perm)
-        return _System(a_bar, b_bar, mc.perm, n, n, mc.n_colors,
-                       sell.rounds_mc(mc, reverse=False),
-                       sell.rounds_mc(mc, reverse=True), None)
-    if method == "bmc":
-        bmc = block_multicolor_ordering(a, block_size)
-        a_bar, b_bar = pad_system(a, b, bmc)
-        return _System(a_bar, b_bar, bmc.perm, n, bmc.n_padded, bmc.n_colors,
-                       sell.rounds_bmc(bmc, reverse=False),
-                       sell.rounds_bmc(bmc, reverse=True), bmc.is_dummy)
-    if method == "hbmc":
-        bmc = block_multicolor_ordering(a, block_size)
-        hb = hbmc_from_bmc(bmc, w)
-        a_bar, b_bar = pad_system_hbmc(a, b, hb)
-        return _System(a_bar, b_bar, hb.perm, n, hb.n_final, hb.n_colors,
-                       sell.rounds_hbmc(hb, reverse=False),
-                       sell.rounds_hbmc(hb, reverse=True), hb.is_dummy)
-    if method == "natural":
-        return _System(a, b, np.arange(n), n, n, n,
-                       sell.rounds_natural(n, reverse=False),
-                       sell.rounds_natural(n, reverse=True), None)
-    raise ValueError(f"unknown method {method!r}")
-
-
-def _build_spmv(a_bar, spmv_format: str, w: int, dtype, batched: bool):
-    if spmv_format == "sell":
-        sm = sell.pack_sell(a_bar, w)
-        vals = jnp.asarray(sm.vals, dtype=dtype)
-        cols = jnp.asarray(sm.cols)
-        if batched:
-            return lambda x: spmv_sell_batched(vals, cols, x, sm.n)
-        return lambda x: spmv_sell(vals, cols, x, sm.n)
-    cols_h, vals_h = sell.pack_ell(a_bar)
-    vals = jnp.asarray(vals_h, dtype=dtype)
-    cols = jnp.asarray(cols_h)
-    if batched:
-        return lambda x: spmv_ell_batched(vals, cols, x)
-    return lambda x: spmv_ell(vals, cols, x)
-
-
-def _build_operators(sysd: _System, shift: float, spmv_format: str, w: int,
-                     dtype, backend: str, interpret: bool | None,
-                     layout: str, batched: bool):
-    """IC(0) + preconditioner + SpMV in the requested layout.
-
-    Returns ``(precond, spmv_fn, rm_layout)``: the preconditioner object
-    (callable for single RHS, ``.apply_batched`` for multi-RHS) and, for
-    layout "round_major", the b-in/x-out permutation pair (None for the
-    index-space path).  ``batched`` selects the SpMV variant only.
-    """
-    if layout not in LAYOUTS:
-        raise ValueError(f"unknown layout {layout!r}; expected one of "
-                         f"{LAYOUTS}")
-    l_bar = ic0(sysd.a_bar, shift=shift)
-    if layout == "round_major":
-        precond, rm = build_round_major_preconditioner_from_rounds(
-            l_bar, sysd.fwd_rounds, sysd.bwd_rounds, drop_mask=sysd.drop,
-            dtype=dtype, backend=backend, interpret=interpret)
-        a_op = sell.permute_round_major(sysd.a_bar, rm)
-    else:
-        precond, rm = build_preconditioner_from_rounds(
-            l_bar, sysd.fwd_rounds, sysd.bwd_rounds, drop_mask=sysd.drop,
-            dtype=dtype, backend=backend, interpret=interpret), None
-        a_op = sysd.a_bar
-    spmv = _build_spmv(a_op, spmv_format, w, dtype, batched=batched)
-    return precond, spmv, rm
+# re-exported so existing imports (benchmarks, tests) keep working
+from .plan import (BatchedICCGReport, ICCGReport, SolverPlan,  # noqa: F401
+                   _build_operators, _occupancy_from_rounds, _order_system,
+                   _System, build_plan)
 
 
 def solve_iccg(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
@@ -165,30 +39,15 @@ def solve_iccg(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
                record_history: bool = False, backend: str = "xla",
                interpret: bool | None = None,
                layout: str = "round_major") -> ICCGReport:
-    a = sp.csr_matrix(a)
-    b = np.asarray(b, dtype=np.dtype(jnp.dtype(dtype)))
-    t0 = time.perf_counter()
-
-    sysd = _order_system(a, b, method, block_size, w)
-    precond, spmv, rm = _build_operators(
-        sysd, shift, spmv_format, w, dtype, backend, interpret, layout,
-        batched=False)
-
-    b_host = rm.embed(sysd.b_bar) if rm is not None else sysd.b_bar
-    b_dev = jnp.asarray(b_host, dtype=dtype)
-    t1 = time.perf_counter()
-    res = pcg(spmv, precond, b_dev, rtol=rtol, maxiter=maxiter,
-              record_history=record_history)
-    t2 = time.perf_counter()
-
-    x_bar = rm.extract(res.x) if rm is not None else res.x
-    x = np.asarray(x_bar[sysd.perm])  # x_orig[i] = x_bar[perm[i]]
-    return ICCGReport(
-        method=method, result=res, n=sysd.n, n_padded=sysd.n_padded,
-        n_colors=sysd.n_colors, n_rounds=precond.n_rounds,
-        setup_seconds=t1 - t0, solve_seconds=t2 - t1,
-        lane_occupancy=_occupancy_from_rounds(sysd.fwd_rounds, sysd.drop),
-        x=x, backend=backend, layout=layout)
+    """One-shot solve: build a ``SolverPlan``, solve, fold setup into the
+    report's ``setup_seconds``."""
+    plan = build_plan(a, method=method, block_size=block_size, w=w,
+                      shift=shift, spmv_format=spmv_format, dtype=dtype,
+                      backend=backend, interpret=interpret, layout=layout)
+    rep = plan.solve(b, rtol=rtol, maxiter=maxiter,
+                     record_history=record_history)
+    rep.setup_seconds += plan.timings.total
+    return rep
 
 
 def solve_iccg_batched(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
@@ -196,44 +55,17 @@ def solve_iccg_batched(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
                        rtol: float = 1e-7, maxiter: int = 10_000,
                        spmv_format: str = "ell", dtype=jnp.float64,
                        backend: str = "xla", interpret: bool | None = None,
-                       layout: str = "round_major") -> BatchedICCGReport:
+                       layout: str = "round_major",
+                       record_history: bool = False) -> BatchedICCGReport:
     """Solve A x_j = b_j for all columns of ``b`` ((n, B)) in one PCG loop."""
-    a = sp.csr_matrix(a)
-    np_dtype = np.dtype(jnp.dtype(dtype))
-    b = np.asarray(b, dtype=np_dtype)
+    b = np.asarray(b)
     if b.ndim != 2:
         raise ValueError(f"solve_iccg_batched expects b of shape (n, B), "
                          f"got {b.shape}")
-    t0 = time.perf_counter()
-
-    sysd = _order_system(a, None, method, block_size, w)
-    precond, spmv, rm = _build_operators(
-        sysd, shift, spmv_format, w, dtype, backend, interpret, layout,
-        batched=True)
-
-    b_bar = np.zeros((sysd.n_padded, b.shape[1]), dtype=np_dtype)
-    b_bar[sysd.perm] = b                  # embed every RHS into padded order
-    b_host = rm.embed(b_bar) if rm is not None else b_bar
-    b_dev = jnp.asarray(b_host, dtype=dtype)
-    t1 = time.perf_counter()
-    res = pcg_batched(spmv, precond.apply_batched, b_dev, rtol=rtol,
-                      maxiter=maxiter)
-    t2 = time.perf_counter()
-
-    x_bar = rm.extract(res.x) if rm is not None else res.x
-    x = np.asarray(x_bar[sysd.perm])      # (n, B) back in original order
-    return BatchedICCGReport(
-        method=method, result=res, n=sysd.n, n_padded=sysd.n_padded,
-        n_colors=sysd.n_colors, n_rounds=precond.n_rounds,
-        setup_seconds=t1 - t0, solve_seconds=t2 - t1,
-        lane_occupancy=_occupancy_from_rounds(sysd.fwd_rounds, sysd.drop),
-        x=x, backend=backend, layout=layout)
-
-
-def _occupancy_from_rounds(rounds, drop) -> float:
-    if drop is not None:
-        rounds = [r[~drop[r]] for r in rounds]
-        rounds = [r for r in rounds if len(r)]
-    live = np.array([len(r) for r in rounds], dtype=np.float64)
-    rmax = live.max(initial=1.0)
-    return float(np.mean(live / rmax)) if len(live) else 1.0
+    plan = build_plan(a, method=method, block_size=block_size, w=w,
+                      shift=shift, spmv_format=spmv_format, dtype=dtype,
+                      backend=backend, interpret=interpret, layout=layout)
+    rep = plan.solve_batched(b, rtol=rtol, maxiter=maxiter,
+                             record_history=record_history)
+    rep.setup_seconds += plan.timings.total
+    return rep

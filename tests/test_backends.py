@@ -152,7 +152,8 @@ def test_batched_pallas_kernel_matches_single(dtype):
         np.testing.assert_allclose(yb[:, j], yj, rtol=tol, atol=tol)
 
 
-@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("backend", [
+    "xla", pytest.param("pallas", marks=pytest.mark.slow)])
 def test_batched_pcg_matches_singles_iteration_for_iteration(backend):
     """Acceptance: every RHS of a batched solve converges, with the same
     per-RHS iteration count as B independent single-RHS solves."""

@@ -14,6 +14,7 @@ def _solve_all(a, b, bs=8, w=4, **kw):
             for m in ("mc", "bmc", "hbmc")}
 
 
+@pytest.mark.slow
 def test_bmc_hbmc_identical_iterations_paper_table52():
     """The paper's central claim: HBMC is equivalent to BMC — identical
     iteration counts on every dataset (Table 5.2)."""

@@ -37,6 +37,7 @@ def test_smoke_forward(arch):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow
 def test_smoke_train_step(arch):
     cfg = get_smoke_config(arch)
     params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
@@ -73,6 +74,7 @@ def test_microbatched_grad_accum_matches_full():
     assert max(jax.tree.leaves(d)) < 2e-5
 
 
+@pytest.mark.slow
 def test_overfit_tiny_batch():
     """The stack can actually learn: loss drops by >30% in 30 steps."""
     cfg = get_smoke_config("qwen2.5-3b")

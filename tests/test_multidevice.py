@@ -67,6 +67,7 @@ def test_distributed_iccg_matches_single_device():
     assert "ITERS" in out
 
 
+@pytest.mark.slow
 def test_pjit_train_step_matches_unsharded():
     code = textwrap.dedent("""
         import jax, numpy as np, jax.numpy as jnp
@@ -112,6 +113,7 @@ def test_pjit_train_step_matches_unsharded():
     run_py(code)
 
 
+@pytest.mark.slow
 def test_shardmap_moe_grads_match_plain():
     code = textwrap.dedent("""
         import jax, numpy as np, jax.numpy as jnp

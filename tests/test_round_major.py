@@ -103,7 +103,8 @@ def test_fused_pallas_kernel_matches_oracle_bitwise(method, dtype):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("method", ORDERINGS)
-@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("backend", [
+    "xla", pytest.param("pallas", marks=pytest.mark.slow)])
 def test_native_iteration_counts_match_index_layout(method, backend):
     """Acceptance: the fused round-major-native solve reproduces the
     pre-refactor (two-call, per-apply-permutation) path's PCG iteration

@@ -28,6 +28,7 @@ def _pos(cfg, b, s):
 
 
 @pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.slow
 def test_decode_matches_full_forward(arch):
     cfg = get_smoke_config(arch)
     s = 20
@@ -48,6 +49,7 @@ def test_decode_matches_full_forward(arch):
 
 
 @pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.slow
 def test_prefill_matches_decode_replay(arch):
     cfg = get_smoke_config(arch)
     s, extra = 18, 5
@@ -83,6 +85,7 @@ def test_ring_cache_is_window_sized():
     assert total < 10**6, "SSM cache must be O(1) in context length"
 
 
+@pytest.mark.slow
 def test_windowed_decode_beyond_window_consistent():
     """Decoding past the window: ring overwrite must equal full recompute
     restricted to the window."""

@@ -27,6 +27,7 @@ def test_natural_gs_matches_scipy_reference():
     np.testing.assert_allclose(x1, xr, rtol=1e-12, atol=1e-12)
 
 
+@pytest.mark.slow
 def test_gs_converges_and_bmc_hbmc_equivalent():
     a = laplace_2d(16, 12)
     b = np.random.default_rng(1).normal(size=a.shape[0])
@@ -51,6 +52,7 @@ def test_gs_converges_and_bmc_hbmc_equivalent():
                                atol=1e-10)
 
 
+@pytest.mark.slow
 def test_sor_relaxation_accelerates():
     a = laplace_2d(14, 14)
     b = np.random.default_rng(2).normal(size=a.shape[0])
