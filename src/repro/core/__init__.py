@@ -6,8 +6,9 @@ from .hbmc import (HBMCOrdering, hbmc_from_bmc, hbmc_ordering,
                    pad_system_hbmc, verify_level2_structure)
 from .ic0 import (IC0Structure, ic0, ic0_error, ic0_refactor, ic0_rounds,
                   ic0_structure, sequential_ic_solve)
-from .iccg import (BatchedPCGResult, PCGResult, pcg, pcg_batched, spmv_ell,
-                   spmv_ell_batched, spmv_sell, spmv_sell_batched)
+from .iccg import (BatchedPCGResult, PCGResult, make_sharded_spmv, pcg,
+                   pcg_batched, pcg_iteration, spmv_ell, spmv_ell_batched,
+                   spmv_sell, spmv_sell_batched)
 from .matrices import PAPER_PROBLEMS, PAPER_SHIFTS, paper_problem
 from .plan import SetupBreakdown, SolverPlan, build_plan
 from .sell import (FusedRoundMajorTables, RoundMajorLayout, RoundMajorTables,
@@ -19,6 +20,7 @@ from .smoothers import GSSmoother, build_gs_smoother, gs_solve
 from .solvers import (BatchedICCGReport, ICCGReport, solve_iccg,
                       solve_iccg_batched)
 from .trisolve import (BACKENDS, LAYOUTS, DeviceFusedTables, DeviceTables,
+                       DistributedRoundMajorPreconditioner,
                        HBMCPreconditioner, RoundMajorPreconditioner,
                        backward_solve, backward_solve_batched,
                        build_preconditioner, build_preconditioner_from_rounds,
@@ -26,4 +28,4 @@ from .trisolve import (BACKENDS, LAYOUTS, DeviceFusedTables, DeviceTables,
                        build_round_major_preconditioner_from_rounds,
                        forward_solve, forward_solve_batched, fused_solve,
                        fused_solve_batched, sequential_backward,
-                       sequential_forward)
+                       sequential_forward, shard_fused_tables)

@@ -190,11 +190,13 @@ def pad_system(a: sp.spmatrix, b: np.ndarray | None, ordering: BMCOrdering
     p = ordering.perm
     rows = p[coo.row]
     cols = p[coo.col]
-    data = coo.data.astype(np.float64)
+    data = coo.data                # keep the caller's dtype (f32 stays f32)
+    if not np.issubdtype(data.dtype, np.floating):
+        data = data.astype(np.float64)
     dummy_idx = np.nonzero(ordering.is_dummy)[0]
     rows = np.concatenate([rows, dummy_idx])
     cols = np.concatenate([cols, dummy_idx])
-    data = np.concatenate([data, np.ones(len(dummy_idx))])
+    data = np.concatenate([data, np.ones(len(dummy_idx), dtype=data.dtype)])
     a_bar = sp.coo_matrix((data, (rows, cols)), shape=(npad, npad)).tocsr()
     b_bar = None
     if b is not None:

@@ -12,11 +12,14 @@ Convergence criterion: relative residual 2-norm < rtol (paper: 1e-7).
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def spmv_ell(vals: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
@@ -48,6 +51,81 @@ def spmv_sell_batched(vals: jax.Array, cols: jax.Array, x: jax.Array,
     g = x[cols]                                    # (n_slices, max_k, w, B)
     y = jnp.einsum("skw,skwb->swb", vals, g)
     return y.reshape(-1, x.shape[1])[:n]
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded SpMV: operand rows (ELL) / slices (SELL) live sharded over one
+# mesh axis, the vector is replicated, and the row results are all-gathered —
+# one collective per SpMV, the distributed analogue of the paper's
+# embarrassingly-parallel matrix-vector kernel.
+# ---------------------------------------------------------------------------
+
+def make_sharded_spmv(spmv_format: str, n: int, mesh: Mesh, axis: str,
+                      vals: jax.Array, cols: jax.Array,
+                      batched: bool) -> Callable[[jax.Array], jax.Array]:
+    """Distributed SpMV closure over mesh-sharded packed operands.
+
+    ``vals``/``cols`` must be sharded over ``axis`` along their leading
+    (row / slice) dimension, with that dimension a multiple of the axis
+    size; the input vector is replicated and the output is replicated
+    (each device computes its row block, one tiled all-gather assembles
+    the full result).  Per-row arithmetic is identical to the
+    single-device ``spmv_ell``/``spmv_sell`` paths, so the distributed
+    PCG reproduces their float sequences bitwise.
+    """
+    if spmv_format == "ell":
+        row_eq = "rk,rkb->rb" if batched else "rk,rk->r"
+
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(P(axis, None), P(axis, None), P()),
+                 out_specs=P(), check_rep=False)
+        def ell_block(v, c, x):
+            y_loc = jnp.einsum(row_eq, v, x[c])
+            return jax.lax.all_gather(y_loc, axis, tiled=True)
+
+        return lambda x: ell_block(vals, cols, x)
+
+    if spmv_format == "sell":
+        slice_eq = "skw,skwb->swb" if batched else "skw,skw->sw"
+
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(P(axis, None, None), P(axis, None, None), P()),
+                 out_specs=P(), check_rep=False)
+        def sell_block(v, c, x):
+            y_loc = jnp.einsum(slice_eq, v, x[c])   # (s, w) or (s, w, B)
+            y_loc = y_loc.reshape((-1,) + y_loc.shape[2:])
+            return jax.lax.all_gather(y_loc, axis, tiled=True)
+
+        return lambda x: sell_block(vals, cols, x)[:n]
+
+    raise ValueError(f"unknown spmv format {spmv_format!r}")
+
+
+def pcg_iteration(spmv: Callable[[jax.Array], jax.Array],
+                  precond: Callable[[jax.Array], jax.Array]):
+    """One PCG step with the PRECONDITIONED pairings, as a pure function.
+
+    The carried state is ``(x, r, p, rz)`` with ``rz = (r, z)`` from the
+    previous step — exactly the body of ``_pcg_device``:
+
+        alpha = (r, z) / (p, A p)        beta = (r2, z2) / (r, z)
+
+    (NOT the unpreconditioned ``(r, r)`` pairings — using those lowers a
+    plain-CG kernel whose roofline misses both triangular sweeps' traffic.)
+    Used by ``core.partition.lower_solver_step`` for mesh dry-runs; tested
+    against ``pcg`` iterates in tests/test_multidevice.py.
+    """
+    def step(x, r, p, rz):
+        ap = spmv(p)
+        alpha = rz / jnp.vdot(p, ap)
+        x = x + alpha * p
+        r = r - alpha * ap
+        z = precond(r)
+        rz_new = jnp.vdot(r, z)
+        beta = rz_new / rz
+        p = z + beta * p
+        return x, r, p, rz_new
+    return step
 
 
 @dataclasses.dataclass
@@ -199,8 +277,10 @@ def _pcg_batched_device(spmv: Callable[[jax.Array], jax.Array],
         if record_history:
             # a column records its residual at row == its own iteration
             # count while active; frozen columns keep their NaN padding,
-            # matching the single-RHS history shape one for one
-            lanes = jnp.arange(nb)
+            # matching the single-RHS history shape one for one (the lane
+            # index dtype must match `iters` — mixed i64/i32 scatter
+            # indices are a FutureWarning on the way to a hard error)
+            lanes = jnp.arange(nb, dtype=iters.dtype)
             hist = hist.at[iters, lanes].set(
                 jnp.where(active, relres, hist[iters, lanes]))
         active = active & (relres >= rtol)

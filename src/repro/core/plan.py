@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import scipy.sparse as sp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import sell
 from .coloring import block_multicolor_ordering, multicolor_ordering, pad_system
@@ -40,12 +41,13 @@ from .graph import permute_system
 from .hbmc import hbmc_from_bmc, pad_system_hbmc
 from .ic0 import ic0_refactor, ic0_structure
 from .iccg import (BatchedPCGResult, PCGResult, _pcg_batched_device,
-                   _pcg_device, spmv_ell, spmv_ell_batched, spmv_sell,
-                   spmv_sell_batched)
-from .trisolve import (BACKENDS, LAYOUTS, HBMCPreconditioner,
-                       RoundMajorPreconditioner,
+                   _pcg_device, make_sharded_spmv, spmv_ell,
+                   spmv_ell_batched, spmv_sell, spmv_sell_batched)
+from .trisolve import (BACKENDS, LAYOUTS, DistributedRoundMajorPreconditioner,
+                       HBMCPreconditioner, RoundMajorPreconditioner,
                        build_preconditioner_from_rounds,
-                       build_round_major_preconditioner_from_rounds)
+                       build_round_major_preconditioner_from_rounds,
+                       shard_fused_tables)
 
 
 @dataclasses.dataclass
@@ -172,12 +174,14 @@ def _build_spmv_ops(a_op: sp.spmatrix, spmv_format: str, w: int, dtype
 
 
 def _build_preconditioner(l_bar, sysd: _System, dtype, backend: str,
-                          interpret: bool | None, layout: str):
+                          interpret: bool | None, layout: str,
+                          lane_multiple: int = 1):
     """Factor -> preconditioner (+ layout object for round_major)."""
     if layout == "round_major":
         return build_round_major_preconditioner_from_rounds(
             l_bar, sysd.fwd_rounds, sysd.bwd_rounds, drop_mask=sysd.drop,
-            dtype=dtype, backend=backend, interpret=interpret)
+            dtype=dtype, backend=backend, interpret=interpret,
+            lane_multiple=lane_multiple)
     return build_preconditioner_from_rounds(
         l_bar, sysd.fwd_rounds, sysd.bwd_rounds, drop_mask=sysd.drop,
         dtype=dtype, backend=backend, interpret=interpret), None
@@ -209,13 +213,31 @@ class SolverPlan:
                  block_size: int = 32, w: int = 8, shift: float = 0.0,
                  spmv_format: str = "ell", dtype=jnp.float64,
                  backend: str = "xla", interpret: bool | None = None,
-                 layout: str = "round_major"):
+                 layout: str = "round_major", mesh: Mesh | None = None,
+                 mesh_axis: str = "data", lane_multiple: int = 1):
         if layout not in LAYOUTS:
             raise ValueError(f"unknown layout {layout!r}; expected one of "
                              f"{LAYOUTS}")
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; expected one of "
                              f"{BACKENDS}")
+        if mesh is not None:
+            if layout != "round_major":
+                raise ValueError("mesh= requires layout='round_major' (the "
+                                 "sharded apply is the fused round-major "
+                                 "sweep)")
+            if backend != "xla":
+                raise ValueError("mesh= requires backend='xla' (the Pallas "
+                                 "kernel is single-device; shard with the "
+                                 "XLA sweep)")
+            if mesh_axis not in mesh.axis_names:
+                raise ValueError(f"mesh has no axis {mesh_axis!r}; axes are "
+                                 f"{mesh.axis_names}")
+            # lane axis must shard evenly: fold the axis size into the lane
+            # padding (a single-device plan with the same lane_multiple is
+            # bitwise identical — the parity oracle of the tests)
+            lane_multiple = int(np.lcm(lane_multiple,
+                                       mesh.shape[mesh_axis]))
         self.method = method
         self.block_size = block_size
         self.w = w
@@ -225,6 +247,9 @@ class SolverPlan:
         self.backend = backend
         self.interpret = interpret
         self.layout = layout
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self.lane_multiple = max(int(lane_multiple), 1)
         self._np_dtype = np.dtype(jnp.dtype(dtype))
         self._pcg_cache: dict[tuple, Any] = {}
         self.setup_count = 0
@@ -284,14 +309,40 @@ class SolverPlan:
         return self.layout == "round_major" or self.backend == "xla"
 
     def _build_operators(self, l_bar) -> None:
-        """Pack the factor + SpMV operand and move them to device."""
+        """Pack the factor + SpMV operand and move them to device.
+
+        Under a mesh, the fused tables' lane axis and the SpMV operand's
+        row/slice axis are placed SHARDED (``NamedSharding``); a
+        ``refactor`` re-runs this with identical shapes and shardings, so
+        the jitted PCG (whose operands are traced arguments) never
+        retraces.
+        """
         self._precond, self._rm = _build_preconditioner(
             l_bar, self._sysd, self.dtype, self.backend, self.interpret,
-            self.layout)
+            self.layout, self.lane_multiple)
         a_op = (sell.permute_round_major(self._sysd.a_bar, self._rm)
                 if self._rm is not None else self._sysd.a_bar)
         self._spmv_vals, self._spmv_cols, self._spmv_n = _pack_spmv(
             a_op, self.spmv_format, self.w, self.dtype)
+        if self.mesh is not None:
+            mesh, ax = self.mesh, self.mesh_axis
+            self._precond = DistributedRoundMajorPreconditioner(
+                tables=shard_fused_tables(self._precond.tables, mesh, ax),
+                mesh=mesh, axis=ax)
+            n_dev = mesh.shape[ax]
+            if self.spmv_format == "sell":
+                # pad the slice axis so it shards evenly (padded slices are
+                # all-zero: they contribute rows beyond n, cut by the [:n])
+                pad = (-self._spmv_vals.shape[0]) % n_dev
+                if pad:
+                    widths = ((0, pad),) + ((0, 0),) * 2
+                    self._spmv_vals = jnp.pad(self._spmv_vals, widths)
+                    self._spmv_cols = jnp.pad(self._spmv_cols, widths)
+                sh = NamedSharding(mesh, P(ax, None, None))
+            else:
+                sh = NamedSharding(mesh, P(ax, None))
+            self._spmv_vals = jax.device_put(self._spmv_vals, sh)
+            self._spmv_cols = jax.device_put(self._spmv_cols, sh)
         if not self._operands_as_args:
             self._pcg_cache.clear()   # closed-over operands -> retrace
 
@@ -343,7 +394,20 @@ class SolverPlan:
         fmt, n_op = self.spmv_format, self._spmv_n
         backend, interpret = self.backend, self.interpret
 
-        if self.layout == "round_major":
+        if self.mesh is not None:
+            mesh, ax = self.mesh, self.mesh_axis
+
+            def run(tables, sv, sc, b):
+                self._trace_count += 1
+                pre = DistributedRoundMajorPreconditioner(tables=tables,
+                                                          mesh=mesh, axis=ax)
+                apply_ = pre.apply_batched if batched else pre
+                spmv = make_sharded_spmv(fmt, n_op, mesh, ax, sv, sc,
+                                         batched)
+                return core(spmv, apply_, b, rtol=rtol, maxiter=maxiter,
+                            record_history=record_history)
+            fn = jax.jit(run)
+        elif self.layout == "round_major":
             def run(tables, sv, sc, b):
                 self._trace_count += 1
                 pre = RoundMajorPreconditioner(tables=tables,
@@ -395,7 +459,10 @@ class SolverPlan:
 
     def _embed(self, b_bar: np.ndarray) -> jax.Array:
         b_host = self._rm.embed(b_bar) if self._rm is not None else b_bar
-        return jnp.asarray(b_host, dtype=self.dtype)
+        b_dev = jnp.asarray(b_host, dtype=self.dtype)
+        if self.mesh is not None:   # state vectors are replicated on the mesh
+            b_dev = jax.device_put(b_dev, NamedSharding(self.mesh, P()))
+        return b_dev
 
     def _extract(self, x_dev) -> np.ndarray:
         x_bar = (self._rm.extract(np.asarray(x_dev))
@@ -469,15 +536,27 @@ def build_plan(a: sp.spmatrix, method: str = "hbmc", block_size: int = 32,
                w: int = 8, shift: float = 0.0, spmv_format: str = "ell",
                dtype=jnp.float64, backend: str = "xla",
                interpret: bool | None = None,
-               layout: str = "round_major") -> SolverPlan:
+               layout: str = "round_major", mesh: Mesh | None = None,
+               mesh_axis: str = "data",
+               lane_multiple: int = 1) -> SolverPlan:
     """One-time setup: ordering -> round-parallel IC(0) -> packed operators.
 
     Returns a ``SolverPlan`` whose ``solve`` / ``solve_batched`` /
     ``refactor`` amortize this cost over arbitrarily many solves.
+
+    With ``mesh=`` (a ``jax.sharding.Mesh``) the plan is distributed: the
+    fused round-major tables' lane axis and the ELL/SELL SpMV operand are
+    sharded over ``mesh_axis`` and the preconditioner apply runs the fused
+    sweep with one collective per round.  ``lane_multiple`` pads the lane
+    axis (folded with the mesh axis size automatically); a single-device
+    plan built with the same ``lane_multiple`` is the bitwise parity
+    oracle for a distributed plan.
     """
     return SolverPlan(a, method=method, block_size=block_size, w=w,
                       shift=shift, spmv_format=spmv_format, dtype=dtype,
-                      backend=backend, interpret=interpret, layout=layout)
+                      backend=backend, interpret=interpret, layout=layout,
+                      mesh=mesh, mesh_axis=mesh_axis,
+                      lane_multiple=lane_multiple)
 
 
 # ---------------------------------------------------------------------------

@@ -100,15 +100,25 @@ def rounds_natural(n: int, reverse: bool = False) -> list[np.ndarray]:
     return out
 
 
+def _pack_dtype(data: np.ndarray) -> np.dtype:
+    """Host pack-buffer dtype: keep floating inputs (f32 stays f32);
+    promote anything else (int test matrices) to f64."""
+    dt = np.asarray(data).dtype
+    return dt if np.issubdtype(dt, np.floating) else np.dtype(np.float64)
+
+
 def pack_steps(tri: sp.csr_matrix, diag: np.ndarray,
                rounds: list[np.ndarray],
-               drop_mask: np.ndarray | None = None) -> StepTables:
+               drop_mask: np.ndarray | None = None,
+               lane_multiple: int = 1) -> StepTables:
     """Pack a strictly-triangular matrix + diagonal into per-round tables.
 
     ``tri`` must be the strictly lower (forward) or strictly upper (backward)
     part in the target order; ``rounds`` the execution-ordered row sets
     (mutually independent within a round).  ``drop_mask`` (bool per row) drops
-    rows (e.g. dummy padding) from the rounds.
+    rows (e.g. dummy padding) from the rounds.  ``lane_multiple`` rounds the
+    lane axis R up to a multiple (pad lanes are the usual inert scratch-slot
+    lanes) so the lane axis can be sharded evenly over a device mesh.
     """
     tri = sp.csr_matrix(tri)
     tri.sort_indices()
@@ -120,16 +130,18 @@ def pack_steps(tri: sp.csr_matrix, diag: np.ndarray,
     S = len(rounds)
     rlens = np.array([len(r) for r in rounds], dtype=np.int64)
     R = int(rlens.max(initial=0))
+    R = -(-R // lane_multiple) * lane_multiple
     row_nnz = np.diff(tri.indptr)
     K = int(row_nnz.max(initial=0))
     K = max(K, 1)
+    vdt = _pack_dtype(tri.data)
     # one flat scatter instead of a per-row Python loop: lane (s, t) holds
     # round s's t-th row; its nnz entries land at [(s*R + t)*K, ... + nnz)
     all_rows = np.concatenate(rounds).astype(np.int64)
     s_idx = np.repeat(np.arange(S), rlens)
     t_idx = ragged_arange(rlens)
     rows = np.full((S, R), n_slots - 1, dtype=np.int32)
-    dinv = np.zeros((S, R), dtype=np.float64)
+    dinv = np.zeros((S, R), dtype=vdt)
     rows[s_idx, t_idx] = all_rows
     dinv[s_idx, t_idx] = 1.0 / diag[all_rows]
     counts = row_nnz[all_rows]
@@ -137,7 +149,7 @@ def pack_steps(tri: sp.csr_matrix, diag: np.ndarray,
     src = np.repeat(tri.indptr[all_rows], counts) + k_off
     dst = np.repeat((s_idx * R + t_idx) * K, counts) + k_off
     cols = np.full(S * R * K, n_slots - 1, dtype=np.int32)
-    vals = np.zeros(S * R * K, dtype=np.float64)
+    vals = np.zeros(S * R * K, dtype=vdt)
     cols[dst] = tri.indices[src]
     vals[dst] = tri.data[src]
     return StepTables(rows=rows, cols=cols.reshape(S, R, K),
@@ -147,7 +159,8 @@ def pack_steps(tri: sp.csr_matrix, diag: np.ndarray,
 
 def pack_factor(l_final: sp.csr_matrix, fwd_rounds: list[np.ndarray],
                 bwd_rounds: list[np.ndarray],
-                drop_mask: np.ndarray | None = None
+                drop_mask: np.ndarray | None = None,
+                lane_multiple: int = 1
                 ) -> tuple[StepTables, StepTables]:
     """Pack L (lower, incl. diagonal, target order) into forward and backward
     substitution tables (backward uses L^T, reverse round order)."""
@@ -155,8 +168,8 @@ def pack_factor(l_final: sp.csr_matrix, fwd_rounds: list[np.ndarray],
     diag = l_final.diagonal()
     strict_lower = sp.tril(l_final, k=-1, format="csr")
     strict_upper = sp.csr_matrix(strict_lower.T)
-    fwd = pack_steps(strict_lower, diag, fwd_rounds, drop_mask)
-    bwd = pack_steps(strict_upper, diag, bwd_rounds, drop_mask)
+    fwd = pack_steps(strict_lower, diag, fwd_rounds, drop_mask, lane_multiple)
+    bwd = pack_steps(strict_upper, diag, bwd_rounds, drop_mask, lane_multiple)
     return fwd, bwd
 
 
@@ -393,7 +406,7 @@ def pack_sell(a: sp.spmatrix, w: int) -> SellMatrix:
     slice_k = nnz_per_row.reshape(n_slices, w).max(axis=1)
     max_k = int(max(slice_k.max(initial=0), 1))
     cols = np.zeros((n_slices, max_k, w), dtype=np.int32)
-    vals = np.zeros((n_slices, max_k, w), dtype=np.float64)
+    vals = np.zeros((n_slices, max_k, w), dtype=_pack_dtype(a.data))
     rows_of, k_off = _ell_scatter_indices(a.indptr)
     cols[rows_of // w, k_off, rows_of % w] = a.indices
     vals[rows_of // w, k_off, rows_of % w] = a.data
@@ -410,7 +423,7 @@ def pack_ell(a: sp.spmatrix) -> tuple[np.ndarray, np.ndarray]:
     k = int(np.diff(a.indptr).max(initial=0))
     k = max(k, 1)
     cols = np.zeros((n, k), dtype=np.int32)
-    vals = np.zeros((n, k), dtype=np.float64)
+    vals = np.zeros((n, k), dtype=_pack_dtype(a.data))
     rows_of, k_off = _ell_scatter_indices(a.indptr)
     cols[rows_of, k_off] = a.indices
     vals[rows_of, k_off] = a.data

@@ -38,12 +38,17 @@ def solve_iccg(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
                spmv_format: str = "ell", dtype=jnp.float64,
                record_history: bool = False, backend: str = "xla",
                interpret: bool | None = None,
-               layout: str = "round_major") -> ICCGReport:
+               layout: str = "round_major", mesh=None,
+               mesh_axis: str = "data",
+               lane_multiple: int = 1) -> ICCGReport:
     """One-shot solve: build a ``SolverPlan``, solve, fold setup into the
-    report's ``setup_seconds``."""
+    report's ``setup_seconds``.  ``mesh=`` distributes the solve (see
+    ``build_plan``)."""
     plan = build_plan(a, method=method, block_size=block_size, w=w,
                       shift=shift, spmv_format=spmv_format, dtype=dtype,
-                      backend=backend, interpret=interpret, layout=layout)
+                      backend=backend, interpret=interpret, layout=layout,
+                      mesh=mesh, mesh_axis=mesh_axis,
+                      lane_multiple=lane_multiple)
     rep = plan.solve(b, rtol=rtol, maxiter=maxiter,
                      record_history=record_history)
     rep.setup_seconds += plan.timings.total
@@ -56,7 +61,9 @@ def solve_iccg_batched(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
                        spmv_format: str = "ell", dtype=jnp.float64,
                        backend: str = "xla", interpret: bool | None = None,
                        layout: str = "round_major",
-                       record_history: bool = False) -> BatchedICCGReport:
+                       record_history: bool = False, mesh=None,
+                       mesh_axis: str = "data",
+                       lane_multiple: int = 1) -> BatchedICCGReport:
     """Solve A x_j = b_j for all columns of ``b`` ((n, B)) in one PCG loop."""
     b = np.asarray(b)
     if b.ndim != 2:
@@ -64,7 +71,9 @@ def solve_iccg_batched(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
                          f"got {b.shape}")
     plan = build_plan(a, method=method, block_size=block_size, w=w,
                       shift=shift, spmv_format=spmv_format, dtype=dtype,
-                      backend=backend, interpret=interpret, layout=layout)
+                      backend=backend, interpret=interpret, layout=layout,
+                      mesh=mesh, mesh_axis=mesh_axis,
+                      lane_multiple=lane_multiple)
     rep = plan.solve_batched(b, rtol=rtol, maxiter=maxiter,
                              record_history=record_history)
     rep.setup_seconds += plan.timings.total

@@ -24,6 +24,11 @@ And two PCG-loop layouts:
 
 All variants expose a multi-RHS path (``apply_batched``) consumed by the
 batched PCG front-end (``iccg.pcg_batched``).
+
+``DistributedRoundMajorPreconditioner`` shards the fused round-major
+apply over a device mesh axis (lane axis sharded, state replicated, one
+all-gather per round — paper §4.4.3 one level up); ``SolverPlan`` wires
+it in via ``build_plan(..., mesh=)``.
 """
 from __future__ import annotations
 
@@ -35,6 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import scipy.sparse as sp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .hbmc import HBMCOrdering
 from .sell import (FusedRoundMajorTables, RoundMajorLayout, StepTables,
@@ -244,6 +251,131 @@ def fused_solve_batched(tables: DeviceFusedTables, q: jax.Array) -> jax.Array:
     return _substitute_fused_batched(tables, q)
 
 
+# ---------------------------------------------------------------------------
+# Mesh-sharded fused substitution: the lane axis R is sharded over one mesh
+# axis, the solution vector is replicated, and each fused step ends in ONE
+# tiled all-gather of the lane updates — the distributed analogue of the
+# paper's "one synchronization per color" (§4.4.3), one level up: level-1
+# blocks -> devices, w lanes -> the vector unit within a device.
+# ---------------------------------------------------------------------------
+
+def _dist_substitute_fused(mesh: Mesh, axis: str, m: int,
+                           cols: jax.Array, vals: jax.Array,
+                           dinv: jax.Array, q: jax.Array,
+                           batched: bool) -> jax.Array:
+    """Fused fwd+bwd sweep with the lane axis sharded over ``axis``.
+
+    ``cols``/``vals``: (2S, R, K) with R a multiple of the axis size;
+    ``dinv``: (2S, R); ``q``: (S, R) (or (S, R, B)).  Per fused step, every
+    device computes its own lane block's updates (gathering from its
+    replica of y) and one ``all_gather(tiled=True)`` assembles the round's
+    dense slice before the store — the per-lane arithmetic is exactly
+    ``_substitute_fused``'s, so results are bitwise identical to the
+    single-device sweep over the same tables.
+    """
+    r_full = dinv.shape[1]
+    t_spec = (P(None, axis, None), P(None, axis, None), P(None, axis))
+    q_spec = P(None, axis, None) if batched else P(None, axis)
+
+    @partial(shard_map, mesh=mesh, in_specs=t_spec + (q_spec,),
+             out_specs=P(), check_rep=False)
+    def solve(cols_l, vals_l, dinv_l, q_l):
+        s_ = q_l.shape[0]
+        r_loc = dinv_l.shape[1]
+        s2 = 2 * s_
+        tail = q_l.shape[2:]                      # () or (B,)
+        y0 = jnp.zeros((m,) + tail, dtype=q_l.dtype)
+        i = jax.lax.axis_index(axis)
+        eq = "rk,rkb->rb" if batched else "rk,rk->r"
+
+        def body(g, y):
+            gathered = jnp.take(y, cols_l[g], axis=0, fill_value=0)
+            acc = jnp.einsum(eq, vals_l[g], gathered)
+            # pin the index dtype: the loop counter is weakly typed and
+            # axis_index is i32 — mixing them flips dtypes between the
+            # dynamic_slice index operands
+            dest = (jnp.where(g < s_, g, s2 - 1 - g) * r_full
+                    ).astype(jnp.int32)
+            zeros = (jnp.zeros_like(dest),) * len(tail)
+            # forward half reads its lane block of q; backward half reads
+            # the y slice it is about to overwrite (see _substitute_fused)
+            q_cur = jnp.where(
+                g < s_, q_l[jnp.minimum(g, s_ - 1)],
+                jax.lax.dynamic_slice(
+                    y, (dest + i * r_loc,) + zeros, (r_loc,) + tail))
+            d = dinv_l[g][:, None] if batched else dinv_l[g]
+            t = (q_cur - acc) * d
+            t_full = jax.lax.all_gather(t, axis, tiled=True)
+            return jax.lax.dynamic_update_slice(y, t_full, (dest,) + zeros)
+
+        return jax.lax.fori_loop(0, s2, body, y0)
+
+    return solve(cols, vals, dinv, q)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedRoundMajorPreconditioner:
+    """``RoundMajorPreconditioner`` sharded over a device mesh axis.
+
+    ``tables`` hold the fused round-major form with the LANE axis sharded
+    over ``mesh``/``axis`` (``NamedSharding(mesh, P(None, axis, None))``
+    for cols/vals, ``P(None, axis)`` for dinv) — the heavy data is fully
+    distributed; the (m,) state vectors stay replicated.  The apply is the
+    fused single-pass 2S-step sweep with one collective per round.
+    """
+    tables: DeviceFusedTables
+    mesh: Mesh
+    axis: str = "data"
+
+    @property
+    def n_rounds(self) -> int:
+        return self.tables.n_steps
+
+    @property
+    def m(self) -> int:
+        return self.tables.n_steps * self.tables.lanes
+
+    def _reshape(self, r: jax.Array, batched: bool) -> jax.Array:
+        s_, lanes = self.tables.n_steps, self.tables.lanes
+        shape = (s_, lanes) + ((r.shape[-1],) if batched else ())
+        return r.reshape(shape)
+
+    def __call__(self, r: jax.Array) -> jax.Array:
+        t = self.tables
+        return _dist_substitute_fused(self.mesh, self.axis, self.m, t.cols,
+                                      t.vals, t.dinv,
+                                      self._reshape(r, batched=False),
+                                      batched=False)
+
+    def apply_batched(self, r: jax.Array) -> jax.Array:
+        t = self.tables
+        return _dist_substitute_fused(self.mesh, self.axis, self.m, t.cols,
+                                      t.vals, t.dinv,
+                                      self._reshape(r, batched=True),
+                                      batched=True)
+
+
+def shard_fused_tables(tables: DeviceFusedTables, mesh: Mesh,
+                       axis: str = "data") -> DeviceFusedTables:
+    """Place fused tables with the lane axis sharded over ``axis``.
+
+    The lane axis must already be a multiple of the axis size — build the
+    plan/tables with ``lane_multiple = mesh.shape[axis]``
+    (``pack_steps(..., lane_multiple=...)``) rather than re-padding here,
+    so every round-major position stays valid.
+    """
+    n_dev = mesh.shape[axis]
+    if tables.lanes % n_dev != 0:
+        raise ValueError(
+            f"lane axis ({tables.lanes}) is not a multiple of mesh axis "
+            f"{axis!r} ({n_dev}); pack with lane_multiple={n_dev}")
+    sh3 = NamedSharding(mesh, P(None, axis, None))
+    sh2 = NamedSharding(mesh, P(None, axis))
+    return DeviceFusedTables(cols=jax.device_put(tables.cols, sh3),
+                             vals=jax.device_put(tables.vals, sh3),
+                             dinv=jax.device_put(tables.dinv, sh2))
+
+
 @dataclasses.dataclass(frozen=True)
 class RoundMajorPreconditioner:
     """IC(0) apply operating natively on round-major (m,) state vectors.
@@ -296,15 +428,19 @@ class RoundMajorPreconditioner:
 def build_round_major_preconditioner_from_rounds(
         l_final: sp.csr_matrix, fwd_rounds, bwd_rounds, drop_mask=None,
         dtype=jnp.float64, backend: str = "xla",
-        interpret: bool | None = None
+        interpret: bool | None = None, lane_multiple: int = 1
         ) -> tuple[RoundMajorPreconditioner, RoundMajorLayout]:
     """Pack a factor into the fused round-major form; returns the native
-    preconditioner plus the layout (the b-in / x-out permutation pair)."""
+    preconditioner plus the layout (the b-in / x-out permutation pair).
+
+    ``lane_multiple`` pads the lane axis so it shards evenly over a mesh
+    axis of that size (see ``DistributedRoundMajorPreconditioner``)."""
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of "
                          f"{BACKENDS}")
     from .sell import pack_factor
-    fwd_h, bwd_h = pack_factor(l_final, fwd_rounds, bwd_rounds, drop_mask)
+    fwd_h, bwd_h = pack_factor(l_final, fwd_rounds, bwd_rounds, drop_mask,
+                               lane_multiple)
     fused_h = fuse_round_major(fwd_h, bwd_h)
     pre = RoundMajorPreconditioner(
         tables=DeviceFusedTables.from_host(fused_h, dtype=dtype),
@@ -333,8 +469,10 @@ class HBMCPreconditioner:
       * ``"pallas"`` — the round-major Pallas kernel held in ``kernel``
         (a ``repro.kernels.ops.KernelPreconditioner``); ``fwd``/``bwd``
         are None so the (S, R, K) tables live on device only once.  The
-        sharded path (core.partition) consumes DeviceTables, i.e. the
-        "xla" layout.
+        legacy index-space dry-run path (core.partition.shard_tables /
+        lower_solver_step) consumes DeviceTables, i.e. the "xla" layout;
+        the production distributed apply is
+        ``DistributedRoundMajorPreconditioner``.
     """
     fwd: DeviceTables | None
     bwd: DeviceTables | None

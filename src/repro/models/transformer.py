@@ -148,8 +148,10 @@ def _prefill_cache(cfg, k, v, positions, build_len):
         return {"k": kc, "v": vc, "pos": pc.astype(jnp.int32)}
     kc = jnp.zeros((b, cap) + k.shape[2:], k.dtype).at[:, :s].set(k)
     vc = jnp.zeros((b, cap) + v.shape[2:], v.dtype).at[:, :s].set(v)
+    # positions arrive as i64 under x64; the cache is i32 — scatter value
+    # dtype must match (mixed-dtype scatter is a FutureWarning -> error)
     pc = jnp.full((b, cap), -1, jnp.int32).at[:, :s].set(
-        jnp.broadcast_to(pos1d[None], (b, s)))
+        jnp.broadcast_to(pos1d[None].astype(jnp.int32), (b, s)))
     return {"k": kc, "v": vc, "pos": pc}
 
 
