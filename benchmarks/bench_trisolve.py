@@ -1,19 +1,23 @@
-"""Trisolve layout benchmark: per-apply-permutation vs round-major-native.
+"""Trisolve + SpMV hot-loop benchmark: layouts, backends, iteration parts.
 
 Compares the two PCG-loop layouts (``layout="index"`` — the pre-refactor
 path that gathers/scatters between index space and the solve layout on
 every preconditioner apply — against ``layout="round_major"`` — the native
 path where the whole loop lives in execution-order coordinates and the
-fwd+bwd sweeps run fused), across backends and batch sizes.
+fwd+bwd sweeps run fused), across backends and batch sizes, and breaks ONE
+PCG iteration into its parts (SpMV, preconditioner apply, vector work —
+dots/axpys/norm) per backend pair so the trajectory tracks the full
+iteration, not just the apply.
 
     PYTHONPATH=src python -m benchmarks.bench_trisolve [--smoke]
         [--out BENCH_trisolve.json]
 
-Emits machine-readable ``BENCH_trisolve.json`` (schema ``bench_trisolve/v1``)
+Emits machine-readable ``BENCH_trisolve.json`` (schema ``bench_trisolve/v2``)
 so the perf trajectory is tracked PR over PR; CI runs ``--smoke`` and
-uploads the file as an artifact.  Off-TPU the Pallas backend runs in
-interpret mode — its rows measure semantics/dispatch, not TPU performance
-(``derived`` speedups therefore come from the compiled XLA rows).
+uploads the file as an artifact.  Off-TPU the Pallas rows (trisolve AND
+SpMV kernels) run in interpret mode — they measure semantics/dispatch, not
+TPU performance (``derived`` speedups therefore come from the compiled XLA
+rows).
 """
 from __future__ import annotations
 
@@ -29,12 +33,17 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 import scipy.sparse as sp  # noqa: E402
 
-from repro.core import LAYOUTS, solve_iccg, solve_iccg_batched  # noqa: E402
+from repro.core import (LAYOUTS, RoundMajorPreconditioner,  # noqa: E402
+                        build_round_major_preconditioner_from_rounds, sell,
+                        solve_iccg, solve_iccg_batched)
+from repro.core.ic0 import ic0_refactor, ic0_structure  # noqa: E402
 from repro.core.matrices import laplace_2d, laplace_3d  # noqa: E402
+from repro.core.plan import _make_spmv  # noqa: E402
 from repro.core.solvers import _build_operators, _order_system  # noqa: E402
 
 BS, W = 8, 8
 BATCHES = (1, 8)
+SPMV_BACKENDS = ("xla", "pallas")
 
 
 def _problems(smoke: bool):
@@ -45,15 +54,90 @@ def _problems(smoke: bool):
             ("lap3d_16", laplace_3d(16, 16, 16))]
 
 
-def _time_apply(apply_fn, r, reps):
-    """Best-of-reps per-apply time (min is robust to scheduler noise)."""
-    apply_fn(r).block_until_ready()          # compile + warm cache
+def _time_call(fn, args, reps):
+    """Best-of-reps call time for a function returning any pytree (min is
+    robust to scheduler noise)."""
+    jax.block_until_ready(fn(*args))         # compile + warm cache
     best = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
-        apply_fn(r).block_until_ready()
+        jax.block_until_ready(fn(*args))
         best = min(best, time.perf_counter() - t0)
     return best * 1e6
+
+
+def _time_apply(apply_fn, r, reps):
+    """Best-of-reps per-apply time."""
+    return _time_call(apply_fn, (r,), reps)
+
+
+@jax.jit
+def _vec_work_single(x, r, p, ap, z, rz):
+    """The non-SpMV, non-precond part of one PCG step (dots/axpys/norm)."""
+    alpha = rz / jnp.vdot(p, ap)
+    x = x + alpha * p
+    r = r - alpha * ap
+    rz_new = jnp.vdot(r, z)
+    beta = rz_new / rz
+    p = z + beta * p
+    return x, r, p, rz_new, jnp.linalg.norm(r)
+
+
+@jax.jit
+def _vec_work_batched(x, r, p, ap, z, rz):
+    pap = jnp.einsum("nb,nb->b", p, ap)
+    alpha = rz / pap
+    x = x + alpha[None, :] * p
+    r = r - alpha[None, :] * ap
+    rz_new = jnp.einsum("nb,nb->b", r, z)
+    beta = rz_new / rz
+    p = z + beta[None, :] * p
+    return x, r, p, rz_new, jnp.linalg.norm(r, axis=0)
+
+
+def bench_iteration_breakdown(name, a, *, reps):
+    """One PCG iteration split into its parts, native round-major layout.
+
+    Rows: (component ∈ {spmv, precond, vector}) × (backend ∈ {xla, pallas};
+    vector work is always compiled XLA) × B ∈ {1, 8}, all on the SELL-w
+    operand so the two SpMV backends price the same layout.
+    """
+    rng = np.random.default_rng(7)
+    sysd = _order_system(sp.csr_matrix(a), None, "hbmc", BS, W)
+    # factor + pack once; the two trisolve backends share the device tables
+    st = ic0_structure(sysd.a_bar, sysd.fwd_rounds)
+    l_bar = ic0_refactor(st, sysd.a_bar)
+    pre_xla, rm = build_round_major_preconditioner_from_rounds(
+        l_bar, sysd.fwd_rounds, sysd.bwd_rounds, drop_mask=sysd.drop)
+    precs = {"xla": pre_xla,
+             "pallas": RoundMajorPreconditioner(tables=pre_xla.tables,
+                                                backend="pallas")}
+    a_rm = sell.permute_round_major(sysd.a_bar, rm)
+    sm = sell.pack_sell(a_rm, W)
+    vals, cols = jnp.asarray(sm.vals), jnp.asarray(sm.cols)
+    m = rm.m
+    rows = []
+
+    def row(component, backend, batch, us):
+        rows.append({"problem": name, "n": int(a.shape[0]), "m": int(m),
+                     "component": component, "backend": backend,
+                     "B": batch, "us": round(us, 1)})
+
+    for batch in BATCHES:
+        shape = (m,) if batch == 1 else (m, batch)
+        r = jnp.asarray(rng.normal(size=shape))
+        for sb in SPMV_BACKENDS:
+            spmv = jax.jit(_make_spmv("sell", m, vals, cols,
+                                      batched=batch != 1, spmv_backend=sb))
+            row("spmv", sb, batch, _time_apply(spmv, r, reps))
+        for tb in SPMV_BACKENDS:
+            apply_fn = precs[tb] if batch == 1 else precs[tb].apply_batched
+            row("precond", tb, batch, _time_apply(apply_fn, r, reps))
+        vw = _vec_work_single if batch == 1 else _vec_work_batched
+        rz = jnp.asarray(1.0) if batch == 1 else jnp.ones(batch)
+        row("vector", "xla", batch, _time_call(vw, (r, r, r, r, r, rz),
+                                               reps))
+    return rows
 
 
 def bench_problem(name, a, *, maxiter, reps, smoke, backends):
@@ -146,18 +230,21 @@ def main() -> None:
     backends = ("xla", "pallas")
 
     rows = []
+    breakdown = []
     for name, a in _problems(args.smoke):
         rows.extend(bench_problem(name, a, maxiter=maxiter, reps=reps,
                                   smoke=args.smoke, backends=backends))
+        breakdown.extend(bench_iteration_breakdown(name, a, reps=reps))
 
     doc = {
-        "schema": "bench_trisolve/v1",
+        "schema": "bench_trisolve/v2",
         "platform": jax.default_backend(),
         "smoke": bool(args.smoke),
         "maxiter": maxiter,
         "block_size": BS,
         "w": W,
         "results": rows,
+        "iteration_breakdown": breakdown,
         "derived": derive_speedups(rows),
     }
     with open(args.out, "w") as f:
@@ -171,6 +258,13 @@ def main() -> None:
         solve = f"{r['solve_us']:12.0f}" if r["solve_us"] else " " * 12
         print(f"{r['problem']:12s} {r['layout']:12s} {r['backend']:7s} "
               f"{r['B']:2d} {r['apply_us']:10.1f} {solve}")
+    print("\nper-iteration breakdown (round-major, SELL operand):")
+    print(f"{'problem':12s} {'component':10s} {'backend':7s} {'B':>2s} "
+          f"{'us':>10s}")
+    for r in breakdown:
+        print(f"{r['problem']:12s} {r['component']:10s} {r['backend']:7s} "
+              f"{r['B']:2d} {r['us']:10.1f}")
+
     print("\nround-major-native speedup over index layout (xla):")
     for k, v in doc["derived"].items():
         parts = [f"apply {v['apply_speedup']:.2f}x"]

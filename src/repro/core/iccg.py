@@ -62,7 +62,9 @@ def spmv_sell_batched(vals: jax.Array, cols: jax.Array, x: jax.Array,
 
 def make_sharded_spmv(spmv_format: str, n: int, mesh: Mesh, axis: str,
                       vals: jax.Array, cols: jax.Array,
-                      batched: bool) -> Callable[[jax.Array], jax.Array]:
+                      batched: bool, spmv_backend: str = "xla",
+                      interpret: bool | None = None
+                      ) -> Callable[[jax.Array], jax.Array]:
     """Distributed SpMV closure over mesh-sharded packed operands.
 
     ``vals``/``cols`` must be sharded over ``axis`` along their leading
@@ -72,7 +74,19 @@ def make_sharded_spmv(spmv_format: str, n: int, mesh: Mesh, axis: str,
     the full result).  Per-row arithmetic is identical to the
     single-device ``spmv_ell``/``spmv_sell`` paths, so the distributed
     PCG reproduces their float sequences bitwise.
+
+    ``spmv_backend="pallas"`` (SELL only) computes each device's row block
+    with the per-device block kernel (``kernels.sell_spmv_block``) instead
+    of the jnp gather — the collective structure (one tiled all-gather) is
+    unchanged, and the kernel's interpret-mode arithmetic matches the jnp
+    path bitwise.
     """
+    if spmv_backend not in ("xla", "pallas"):
+        raise ValueError(f"unknown spmv backend {spmv_backend!r}; expected "
+                         "'xla' or 'pallas'")
+    if spmv_backend == "pallas" and spmv_format != "sell":
+        raise ValueError("spmv_backend='pallas' requires spmv_format='sell' "
+                         "(the kernel family is SELL-w)")
     if spmv_format == "ell":
         row_eq = "rk,rkb->rb" if batched else "rk,rk->r"
 
@@ -87,13 +101,20 @@ def make_sharded_spmv(spmv_format: str, n: int, mesh: Mesh, axis: str,
 
     if spmv_format == "sell":
         slice_eq = "skw,skwb->swb" if batched else "skw,skw->sw"
+        use_kernel = spmv_backend == "pallas"
+        if use_kernel:
+            # deferred: repro.kernels.__init__ imports repro.core
+            from repro.kernels.sell_spmv import sell_spmv_block
 
         @partial(shard_map, mesh=mesh,
                  in_specs=(P(axis, None, None), P(axis, None, None), P()),
                  out_specs=P(), check_rep=False)
         def sell_block(v, c, x):
-            y_loc = jnp.einsum(slice_eq, v, x[c])   # (s, w) or (s, w, B)
-            y_loc = y_loc.reshape((-1,) + y_loc.shape[2:])
+            if use_kernel:
+                y_loc = sell_spmv_block(v, c, x, interpret=interpret)
+            else:
+                y_loc = jnp.einsum(slice_eq, v, x[c])  # (s, w) or (s, w, B)
+                y_loc = y_loc.reshape((-1,) + y_loc.shape[2:])
             return jax.lax.all_gather(y_loc, axis, tiled=True)
 
         return lambda x: sell_block(vals, cols, x)[:n]

@@ -64,6 +64,7 @@ class ICCGReport:
     x: np.ndarray           # solution in ORIGINAL ordering (== result.x)
     backend: str = "xla"
     layout: str = "round_major"
+    spmv_backend: str = "xla"
 
 
 @dataclasses.dataclass
@@ -80,6 +81,7 @@ class BatchedICCGReport:
     x: np.ndarray           # (n, B) solutions in ORIGINAL ordering (== result.x)
     backend: str = "xla"
     layout: str = "round_major"
+    spmv_backend: str = "xla"
 
 
 @dataclasses.dataclass
@@ -152,9 +154,27 @@ def _pack_spmv(a_op: sp.spmatrix, spmv_format: str, w: int, dtype
             a_op.shape[0])
 
 
-def _make_spmv(spmv_format: str, n: int, vals, cols,
-               batched: bool) -> Callable:
-    """SpMV closure over (possibly traced) packed operands."""
+def _make_spmv(spmv_format: str, n: int, vals, cols, batched: bool,
+               spmv_backend: str = "xla",
+               interpret: bool | None = None) -> Callable:
+    """SpMV closure over (possibly traced) packed operands.
+
+    ``spmv_backend="pallas"`` (SELL only) routes through the
+    ``kernels.sell_spmv`` family instead of the jnp gather/einsum path —
+    bitwise-identical arithmetic in interpret mode, dense slice-tiled VMEM
+    traffic when compiled on TPU.
+    """
+    if spmv_backend == "pallas":
+        if spmv_format != "sell":
+            raise ValueError("spmv_backend='pallas' requires "
+                             "spmv_format='sell' (the kernel family is "
+                             "SELL-w)")
+        # deferred: repro.kernels.__init__ imports repro.core
+        from repro.kernels.sell_spmv import sell_spmv, sell_spmv_batched
+        if batched:
+            return lambda x: sell_spmv_batched(vals, cols, x,
+                                               interpret=interpret)[:n]
+        return lambda x: sell_spmv(vals, cols, x, interpret=interpret)[:n]
     if spmv_format == "sell":
         if batched:
             return lambda x: spmv_sell_batched(vals, cols, x, n)
@@ -164,13 +184,17 @@ def _make_spmv(spmv_format: str, n: int, vals, cols,
     return lambda x: spmv_ell(vals, cols, x)
 
 
-def _build_spmv_ops(a_op: sp.spmatrix, spmv_format: str, w: int, dtype
+def _build_spmv_ops(a_op: sp.spmatrix, spmv_format: str, w: int, dtype,
+                    spmv_backend: str = "xla",
+                    interpret: bool | None = None
                     ) -> tuple[Callable, Callable]:
     """Pack a matrix for SpMV; returns (single-RHS, multi-RHS) closures
     sharing one set of device operands."""
     vals, cols, n = _pack_spmv(a_op, spmv_format, w, dtype)
-    return (_make_spmv(spmv_format, n, vals, cols, batched=False),
-            _make_spmv(spmv_format, n, vals, cols, batched=True))
+    return (_make_spmv(spmv_format, n, vals, cols, batched=False,
+                       spmv_backend=spmv_backend, interpret=interpret),
+            _make_spmv(spmv_format, n, vals, cols, batched=True,
+                       spmv_backend=spmv_backend, interpret=interpret))
 
 
 def _build_preconditioner(l_bar, sysd: _System, dtype, backend: str,
@@ -214,13 +238,21 @@ class SolverPlan:
                  spmv_format: str = "ell", dtype=jnp.float64,
                  backend: str = "xla", interpret: bool | None = None,
                  layout: str = "round_major", mesh: Mesh | None = None,
-                 mesh_axis: str = "data", lane_multiple: int = 1):
+                 mesh_axis: str = "data", lane_multiple: int = 1,
+                 spmv_backend: str = "xla"):
         if layout not in LAYOUTS:
             raise ValueError(f"unknown layout {layout!r}; expected one of "
                              f"{LAYOUTS}")
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; expected one of "
                              f"{BACKENDS}")
+        if spmv_backend not in BACKENDS:
+            raise ValueError(f"unknown spmv backend {spmv_backend!r}; "
+                             f"expected one of {BACKENDS}")
+        if spmv_backend == "pallas" and spmv_format != "sell":
+            raise ValueError("spmv_backend='pallas' requires "
+                             "spmv_format='sell' (the kernel family is "
+                             "SELL-w)")
         if mesh is not None:
             if layout != "round_major":
                 raise ValueError("mesh= requires layout='round_major' (the "
@@ -243,6 +275,7 @@ class SolverPlan:
         self.w = w
         self.shift = shift
         self.spmv_format = spmv_format
+        self.spmv_backend = spmv_backend
         self.dtype = dtype
         self.backend = backend
         self.interpret = interpret
@@ -393,6 +426,7 @@ class SolverPlan:
         core = _pcg_batched_device if batched else _pcg_device
         fmt, n_op = self.spmv_format, self._spmv_n
         backend, interpret = self.backend, self.interpret
+        spmv_backend = self.spmv_backend
 
         if self.mesh is not None:
             mesh, ax = self.mesh, self.mesh_axis
@@ -403,7 +437,8 @@ class SolverPlan:
                                                           mesh=mesh, axis=ax)
                 apply_ = pre.apply_batched if batched else pre
                 spmv = make_sharded_spmv(fmt, n_op, mesh, ax, sv, sc,
-                                         batched)
+                                         batched, spmv_backend=spmv_backend,
+                                         interpret=interpret)
                 return core(spmv, apply_, b, rtol=rtol, maxiter=maxiter,
                             record_history=record_history)
             fn = jax.jit(run)
@@ -414,7 +449,9 @@ class SolverPlan:
                                                backend=backend,
                                                interpret=interpret)
                 apply_ = pre.apply_batched if batched else pre
-                spmv = _make_spmv(fmt, n_op, sv, sc, batched)
+                spmv = _make_spmv(fmt, n_op, sv, sc, batched,
+                                  spmv_backend=spmv_backend,
+                                  interpret=interpret)
                 return core(spmv, apply_, b, rtol=rtol, maxiter=maxiter,
                             record_history=record_history)
             fn = jax.jit(run)
@@ -426,7 +463,9 @@ class SolverPlan:
                 pre = HBMCPreconditioner(fwd=fwd, bwd=bwd, n_final=n_final,
                                          backend="xla", kernel=None)
                 apply_ = pre.apply_batched if batched else pre
-                spmv = _make_spmv(fmt, n_op, sv, sc, batched)
+                spmv = _make_spmv(fmt, n_op, sv, sc, batched,
+                                  spmv_backend=spmv_backend,
+                                  interpret=interpret)
                 return core(spmv, apply_, b, rtol=rtol, maxiter=maxiter,
                             record_history=record_history)
             fn = jax.jit(run)
@@ -436,7 +475,8 @@ class SolverPlan:
             pre = self._precond
             apply_ = pre.apply_batched if batched else pre
             spmv = _make_spmv(fmt, n_op, self._spmv_vals, self._spmv_cols,
-                              batched)
+                              batched, spmv_backend=spmv_backend,
+                              interpret=interpret)
 
             def run(b):
                 self._trace_count += 1
@@ -499,7 +539,8 @@ class SolverPlan:
             n_padded=self.n_padded, n_colors=self.n_colors,
             n_rounds=self.n_rounds, setup_seconds=t1 - t0,
             solve_seconds=t2 - t1, lane_occupancy=self.lane_occupancy,
-            x=x_out, backend=self.backend, layout=self.layout)
+            x=x_out, backend=self.backend, layout=self.layout,
+            spmv_backend=self.spmv_backend)
 
     def solve_batched(self, b: np.ndarray, rtol: float = 1e-7,
                       maxiter: int = 10_000,
@@ -529,7 +570,8 @@ class SolverPlan:
             n_padded=self.n_padded, n_colors=self.n_colors,
             n_rounds=self.n_rounds, setup_seconds=t1 - t0,
             solve_seconds=t2 - t1, lane_occupancy=self.lane_occupancy,
-            x=x_out, backend=self.backend, layout=self.layout)
+            x=x_out, backend=self.backend, layout=self.layout,
+            spmv_backend=self.spmv_backend)
 
 
 def build_plan(a: sp.spmatrix, method: str = "hbmc", block_size: int = 32,
@@ -538,7 +580,8 @@ def build_plan(a: sp.spmatrix, method: str = "hbmc", block_size: int = 32,
                interpret: bool | None = None,
                layout: str = "round_major", mesh: Mesh | None = None,
                mesh_axis: str = "data",
-               lane_multiple: int = 1) -> SolverPlan:
+               lane_multiple: int = 1,
+               spmv_backend: str = "xla") -> SolverPlan:
     """One-time setup: ordering -> round-parallel IC(0) -> packed operators.
 
     Returns a ``SolverPlan`` whose ``solve`` / ``solve_batched`` /
@@ -551,12 +594,18 @@ def build_plan(a: sp.spmatrix, method: str = "hbmc", block_size: int = 32,
     axis (folded with the mesh axis size automatically); a single-device
     plan built with the same ``lane_multiple`` is the bitwise parity
     oracle for a distributed plan.
+
+    ``backend`` picks the trisolve implementation; ``spmv_backend`` (with
+    ``spmv_format="sell"``) independently picks the SpMV one — with both
+    set to ``"pallas"`` the entire PCG iteration runs through Pallas
+    kernels on one VMEM-resident round-major state.
     """
     return SolverPlan(a, method=method, block_size=block_size, w=w,
                       shift=shift, spmv_format=spmv_format, dtype=dtype,
                       backend=backend, interpret=interpret, layout=layout,
                       mesh=mesh, mesh_axis=mesh_axis,
-                      lane_multiple=lane_multiple)
+                      lane_multiple=lane_multiple,
+                      spmv_backend=spmv_backend)
 
 
 # ---------------------------------------------------------------------------
@@ -565,7 +614,7 @@ def build_plan(a: sp.spmatrix, method: str = "hbmc", block_size: int = 32,
 
 def _build_operators(sysd: _System, shift: float, spmv_format: str, w: int,
                      dtype, backend: str, interpret: bool | None,
-                     layout: str, batched: bool):
+                     layout: str, batched: bool, spmv_backend: str = "xla"):
     """IC(0) + preconditioner + SpMV in the requested layout.
 
     Returns ``(precond, spmv_fn, rm_layout)`` exactly as the pre-plan
@@ -582,5 +631,7 @@ def _build_operators(sysd: _System, shift: float, spmv_format: str, w: int,
                                         interpret, layout)
     a_op = sell.permute_round_major(sysd.a_bar, rm) if rm is not None \
         else sysd.a_bar
-    single, batched_fn = _build_spmv_ops(a_op, spmv_format, w, dtype)
+    single, batched_fn = _build_spmv_ops(a_op, spmv_format, w, dtype,
+                                         spmv_backend=spmv_backend,
+                                         interpret=interpret)
     return precond, (batched_fn if batched else single), rm

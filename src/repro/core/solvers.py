@@ -40,15 +40,19 @@ def solve_iccg(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
                interpret: bool | None = None,
                layout: str = "round_major", mesh=None,
                mesh_axis: str = "data",
-               lane_multiple: int = 1) -> ICCGReport:
+               lane_multiple: int = 1,
+               spmv_backend: str = "xla") -> ICCGReport:
     """One-shot solve: build a ``SolverPlan``, solve, fold setup into the
     report's ``setup_seconds``.  ``mesh=`` distributes the solve (see
-    ``build_plan``)."""
+    ``build_plan``); ``spmv_backend="pallas"`` (with
+    ``spmv_format="sell"``) runs the SpMV through the Pallas SELL-w
+    kernel family."""
     plan = build_plan(a, method=method, block_size=block_size, w=w,
                       shift=shift, spmv_format=spmv_format, dtype=dtype,
                       backend=backend, interpret=interpret, layout=layout,
                       mesh=mesh, mesh_axis=mesh_axis,
-                      lane_multiple=lane_multiple)
+                      lane_multiple=lane_multiple,
+                      spmv_backend=spmv_backend)
     rep = plan.solve(b, rtol=rtol, maxiter=maxiter,
                      record_history=record_history)
     rep.setup_seconds += plan.timings.total
@@ -63,7 +67,8 @@ def solve_iccg_batched(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
                        layout: str = "round_major",
                        record_history: bool = False, mesh=None,
                        mesh_axis: str = "data",
-                       lane_multiple: int = 1) -> BatchedICCGReport:
+                       lane_multiple: int = 1,
+                       spmv_backend: str = "xla") -> BatchedICCGReport:
     """Solve A x_j = b_j for all columns of ``b`` ((n, B)) in one PCG loop."""
     b = np.asarray(b)
     if b.ndim != 2:
@@ -73,7 +78,8 @@ def solve_iccg_batched(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
                       shift=shift, spmv_format=spmv_format, dtype=dtype,
                       backend=backend, interpret=interpret, layout=layout,
                       mesh=mesh, mesh_axis=mesh_axis,
-                      lane_multiple=lane_multiple)
+                      lane_multiple=lane_multiple,
+                      spmv_backend=spmv_backend)
     rep = plan.solve_batched(b, rtol=rtol, maxiter=maxiter,
                              record_history=record_history)
     rep.setup_seconds += plan.timings.total

@@ -10,6 +10,12 @@ from __future__ import annotations
 
 import jax
 
+# Slices per grid step of the SELL SpMV kernels (VMEM tile height): one
+# tile is slice_tile * K * w values + as many int32 columns — ~0.5 MiB at
+# the production K <= 32, w = 8, f32, far below VMEM alongside the
+# resident x vector.
+DEFAULT_SLICE_TILE = 256
+
 
 def default_interpret() -> bool:
     """True iff Pallas kernels should run in interpret mode (no TPU)."""

@@ -42,6 +42,13 @@ def sell_spmv_ref(vals: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
     return jnp.einsum("skw,skw->sw", vals, g).reshape(-1)
 
 
+def sell_spmv_batched_ref(vals: jax.Array, cols: jax.Array,
+                          x: jax.Array) -> jax.Array:
+    """Multi-RHS SELL-w SpMV oracle.  x: (n, B) -> (n_slices*w, B)."""
+    g = jnp.take(x, cols, axis=0, fill_value=0)            # (S, K, w, B)
+    return jnp.einsum("skw,skwb->swb", vals, g).reshape(-1, x.shape[-1])
+
+
 def hbmc_trisolve_fused_ref(cols: jax.Array, vals: jax.Array,
                             dinv: jax.Array, q: jax.Array) -> jax.Array:
     """Fused fwd+bwd round-major solve oracle.  cols: (2S, R, K); q: (S, R).

@@ -1,11 +1,30 @@
-"""Pallas TPU kernel for SELL-w sparse matrix-vector multiplication (§4.4.2).
+"""Pallas TPU kernel family for SELL-w sparse matrix-vector products (§5.2).
 
 SELL-C-sigma with C = w: each slice holds w rows column-major so one VPU
-load covers one (k, lane) plane.  The kernel tiles slices over the grid;
+load covers one (k, lane) plane.  The kernels tile slices over the grid;
 x stays VMEM-resident for gathers (same residency argument as the trisolve
 kernel).  Slices are zero-padded to the slice-max row length, matching the
 paper's SELL cost model (the Audikw_1 40%-padding discussion in §5.2.2 is
-reproduced by ``benchmarks/trisolve_bench.py`` via the padded_nnz counter).
+reproduced by ``benchmarks/bench_trisolve.py`` via the padded_nnz counter).
+
+Three entry points sharing one kernel body:
+
+  * ``sell_spmv``          — single RHS, x (n_pad,) -> y (n_slices*w,)
+  * ``sell_spmv_batched``  — B RHS, x (n_pad, B) -> y (n_slices*w, B); the
+    B columns share every gather of the column-index plane, the same
+    amortization as the batched trisolve kernel
+  * ``sell_spmv_block``    — shard_map-compatible per-device block variant:
+    consumes the LOCAL slice shard of the operands plus the replicated
+    vector and returns the local row block (no slicing to n — the caller
+    all-gathers; see ``core.iccg.make_sharded_spmv``)
+
+All outputs are in slice-row-major order, padded to ``n_slices * w`` rows;
+callers slice to the matrix dimension (``core.plan._make_spmv`` does).  The
+gather semantics (``jnp.take(..., fill_value=0)``) against zero-padded
+``vals`` make padding lanes contribute exact zeros, so results match the
+jnp oracles in ``ref.py`` bit for bit in interpret mode (asserted in
+tests/test_spmv.py).  ``interpret`` defaults from the backend
+(``config.resolve_interpret``): compiled on TPU, interpreted elsewhere.
 """
 from __future__ import annotations
 
@@ -15,7 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .config import resolve_interpret
+from .config import DEFAULT_SLICE_TILE, resolve_interpret
 
 
 def _sell_spmv_kernel(vals_ref, cols_ref, x_ref, y_ref):
@@ -26,9 +45,30 @@ def _sell_spmv_kernel(vals_ref, cols_ref, x_ref, y_ref):
     y_ref[...] = jnp.einsum("skw,skw->sw", vals, g)
 
 
+def _sell_spmv_batched_kernel(vals_ref, cols_ref, x_ref, y_ref):
+    vals = vals_ref[...]          # (T, K, w)
+    cols = cols_ref[...]          # (T, K, w)
+    x = x_ref[...]                # (n_pad, B)
+    g = jnp.take(x, cols, axis=0, fill_value=0)       # (T, K, w, B)
+    y_ref[...] = jnp.einsum("skw,skwb->swb", vals, g)
+
+
+def _pad_slices(vals: jax.Array, cols: jax.Array, slice_tile: int
+                ) -> tuple[jax.Array, jax.Array, int]:
+    """Pad the slice axis to a multiple of the grid tile (zero slices)."""
+    n_slices = vals.shape[0]
+    t = min(slice_tile, n_slices)
+    pad = (-n_slices) % t
+    if pad:
+        widths = ((0, pad),) + ((0, 0),) * (vals.ndim - 1)
+        vals = jnp.pad(vals, widths)
+        cols = jnp.pad(cols, widths)
+    return vals, cols, t
+
+
 @functools.partial(jax.jit, static_argnames=("slice_tile", "interpret"))
 def sell_spmv(vals: jax.Array, cols: jax.Array, x: jax.Array,
-              *, slice_tile: int = 256,
+              *, slice_tile: int = DEFAULT_SLICE_TILE,
               interpret: bool | None = None) -> jax.Array:
     """y = A x with A in SELL-w layout.
 
@@ -36,7 +76,7 @@ def sell_spmv(vals: jax.Array, cols: jax.Array, x: jax.Array,
       vals: (n_slices, K, w) slice-packed values (0 padding).
       cols: (n_slices, K, w) int32 column indices (padding -> any index whose
         vals entry is 0; fill_value guards out-of-range).
-      x:    (n_pad,) input vector (padded to n_slices*w).
+      x:    (n_pad,) input vector.
       slice_tile: slices per grid step (VMEM tile height).
 
     Returns:
@@ -44,17 +84,11 @@ def sell_spmv(vals: jax.Array, cols: jax.Array, x: jax.Array,
     """
     interpret = resolve_interpret(interpret)
     n_slices, k_, w_ = vals.shape
-    t = min(slice_tile, n_slices)
-    # pad slice count to a multiple of the tile
-    pad = (-n_slices) % t
-    if pad:
-        vals = jnp.pad(vals, ((0, pad), (0, 0), (0, 0)))
-        cols = jnp.pad(cols, ((0, pad), (0, 0), (0, 0)))
+    vals, cols, t = _pad_slices(vals, cols, slice_tile)
     ns = vals.shape[0]
-    grid = (ns // t,)
     y = pl.pallas_call(
         _sell_spmv_kernel,
-        grid=grid,
+        grid=(ns // t,),
         in_specs=[
             pl.BlockSpec((t, k_, w_), lambda i: (i, 0, 0)),
             pl.BlockSpec((t, k_, w_), lambda i: (i, 0, 0)),
@@ -65,3 +99,55 @@ def sell_spmv(vals: jax.Array, cols: jax.Array, x: jax.Array,
         interpret=interpret,
     )(vals, cols, x)
     return y.reshape(-1)[:n_slices * w_]
+
+
+@functools.partial(jax.jit, static_argnames=("slice_tile", "interpret"))
+def sell_spmv_batched(vals: jax.Array, cols: jax.Array, x: jax.Array,
+                      *, slice_tile: int = DEFAULT_SLICE_TILE,
+                      interpret: bool | None = None) -> jax.Array:
+    """Y = A X for B column vectors at once.  x: (n_pad, B).
+
+    One gather of the (K, w) column-index plane serves all B columns; the
+    K-reduction per (row, column) matches ``sell_spmv`` exactly, keeping
+    batched and single-RHS PCG arithmetic identical.
+
+    Returns:
+      y: (n_slices * w, B) in slice-row-major order.
+    """
+    interpret = resolve_interpret(interpret)
+    n_slices, k_, w_ = vals.shape
+    b_ = x.shape[-1]
+    vals, cols, t = _pad_slices(vals, cols, slice_tile)
+    ns = vals.shape[0]
+    y = pl.pallas_call(
+        _sell_spmv_batched_kernel,
+        grid=(ns // t,),
+        in_specs=[
+            pl.BlockSpec((t, k_, w_), lambda i: (i, 0, 0)),
+            pl.BlockSpec((t, k_, w_), lambda i: (i, 0, 0)),
+            pl.BlockSpec((x.shape[0], b_), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, w_, b_), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ns, w_, b_), vals.dtype),
+        interpret=interpret,
+    )(vals, cols, x)
+    return y.reshape(-1, b_)[:n_slices * w_]
+
+
+def sell_spmv_block(vals: jax.Array, cols: jax.Array, x: jax.Array,
+                    *, slice_tile: int = DEFAULT_SLICE_TILE,
+                    interpret: bool | None = None) -> jax.Array:
+    """Per-device block SpMV for use inside ``shard_map``.
+
+    ``vals``/``cols`` are the device-LOCAL slice shard ((s_loc, K, w));
+    ``x`` is the replicated input vector ((n_pad,) or (n_pad, B)) indexed
+    by GLOBAL positions, so the local gather needs no index translation.
+    Returns the local row block ((s_loc * w,) or (s_loc * w, B)) — the
+    caller assembles the full result with one tiled all-gather
+    (``core.iccg.make_sharded_spmv``), mirroring the xla sharded path.
+    """
+    if x.ndim == 2:
+        return sell_spmv_batched(vals, cols, x, slice_tile=slice_tile,
+                                 interpret=interpret)
+    return sell_spmv(vals, cols, x, slice_tile=slice_tile,
+                     interpret=interpret)

@@ -1,3 +1,5 @@
+import os
+
 import jax
 import numpy as np
 import pytest
@@ -6,6 +8,20 @@ import pytest
 # Table 5.2 iteration counts are only bitwise-stable in double precision).
 # Model tests pass explicit f32 dtypes, unaffected by this flag.
 jax.config.update("jax_enable_x64", True)
+
+try:
+    # Bounded CI profile: capped examples, no deadline flakes, derandomized
+    # so every CI run covers the same example set.  Local runs keep
+    # hypothesis defaults (or the deterministic fallback engine in
+    # tests/_hypothesis_stub.py when hypothesis is absent).
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("ci", max_examples=25, deadline=None,
+                                   derandomize=True)
+    if os.environ.get("CI"):
+        _hyp_settings.load_profile("ci")
+except ImportError:
+    pass
 
 
 @pytest.fixture(scope="module", autouse=True)

@@ -9,7 +9,7 @@ import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
-except ImportError:   # optional dep: only the property sweeps need it
+except ImportError:   # fallback engine: property sweeps still RUN without it
     from _hypothesis_stub import given, settings, st
 
 from repro.models.layers import decode_attention, flash_attention

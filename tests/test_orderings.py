@@ -5,7 +5,7 @@ import scipy.sparse as sp
 
 try:
     from hypothesis import given, settings, strategies as st
-except ImportError:   # optional dep: only the property sweeps need it
+except ImportError:   # fallback engine: property sweeps still RUN without it
     from _hypothesis_stub import given, settings, st
 
 from repro.core import (block_multicolor_ordering, check_er_condition,

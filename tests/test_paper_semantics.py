@@ -1,0 +1,59 @@
+"""Paper's headline semantic claim, pinned as iteration-count bands.
+
+Table 5.2 / Fig. 5.1: HBMC converges like BMC (equivalent reordering —
+identical preconditioner, identical counts) and beats nodal MC on most
+problems (13 of 15 cases in the paper; our synthetic ``ieej`` analogue is
+the counter-example here, as the eddy-current family is in the paper).
+
+The bands below are measured on the committed generators (seed 7,
+``block_size=8, w=4``, ``PAPER_SHIFTS`` applied) — a convergence
+regression in ANY ordering (a broken coloring, factorization, packing or
+solve) moves a count out of its band and trips tier-1.
+"""
+import numpy as np
+import pytest
+
+from repro.core import solve_iccg
+from repro.core.matrices import PAPER_PROBLEMS, PAPER_SHIFTS, paper_problem
+
+BS, W = 8, 4
+
+# measured hbmc iteration counts at the settings above; band = ±2 absorbs
+# reduction-order-level drift without letting a real regression through
+EXPECTED_HBMC = {
+    "thermal2": 38,
+    "parabolic_fem": 6,
+    "g3_circuit": 21,
+    "audikw_1": 21,
+    "ieej": 31,
+}
+BAND = 2
+# the one problem family where nodal MC wins (the paper's 2 of 15 cases)
+MC_WINS = {"ieej"}
+
+
+def _iterations(name):
+    a, _ = paper_problem(name, scale="tiny")
+    b = np.random.default_rng(7).normal(size=a.shape[0])
+    shift = PAPER_SHIFTS.get(name, 0.0)
+    reps = {m: solve_iccg(a, b, method=m, block_size=BS, w=W, shift=shift)
+            for m in ("mc", "bmc", "hbmc")}
+    for m, rep in reps.items():
+        assert rep.result.converged, (name, m)
+    return {m: rep.result.iterations for m, rep in reps.items()}
+
+
+@pytest.mark.parametrize("name", PAPER_PROBLEMS)
+def test_hbmc_tracks_bmc_and_beats_nodal_mc(name):
+    its = _iterations(name)
+    # HBMC is an equivalent reordering of BMC: identical counts (§4.2)
+    assert its["hbmc"] == its["bmc"], its
+    # absolute band: any ordering regressing its convergence trips this
+    assert abs(its["hbmc"] - EXPECTED_HBMC[name]) <= BAND, its
+    if name in MC_WINS:
+        # the paper's own counter-example family: nodal MC may win, but
+        # block coloring must stay within a few iterations
+        assert its["hbmc"] <= its["mc"] + 2 * BAND, its
+    else:
+        # the headline claim: block coloring converges no worse than MC
+        assert its["hbmc"] <= its["mc"], its

@@ -1,0 +1,135 @@
+"""Property-based ordering/layout invariants over random instances.
+
+Runs under real ``hypothesis`` when installed (CI) and under the
+deterministic fallback engine in ``_hypothesis_stub.py`` otherwise — the
+sweeps RUN in both environments (never skip).
+
+Each property pins a paper-level invariant on random
+``graph_laplacian`` / ``laplace_2d`` instances:
+
+  * every ordering's ``perm`` is a valid permutation (a bijection of the
+    original unknowns into the padded system);
+  * no intra-round edges survive — the rows of one execution round are
+    mutually independent in the permuted matrix for mc/bmc/hbmc (the
+    §3/§4 independence property that makes the trisolve rounds parallel);
+  * HBMC's secondary reordering respects level-1 block membership: the
+    unknowns of BMC block p (within its color) land in level-1 block
+    ``p // w`` of the same color (paper eq. 4.1);
+  * ``RoundMajorLayout`` b-in/x-out permutations round-trip bitwise, for
+    (n,) and (n, B) vectors.
+"""
+import numpy as np
+import scipy.sparse as sp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # fallback engine: property sweeps still RUN without it
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import fuse_round_major, pack_factor
+from repro.core.ic0 import ic0
+from repro.core.matrices import graph_laplacian, laplace_2d
+from repro.core.solvers import _order_system
+
+METHODS = ("mc", "bmc", "hbmc")
+
+
+def _random_instance(kind: str, size: int, seed: int) -> sp.csr_matrix:
+    if kind == "graph":
+        return graph_laplacian(30 + 10 * size, avg_degree=3 + size % 3,
+                               seed=seed)
+    nx, ny = 4 + size, 4 + (size * 7 + seed) % 9
+    return laplace_2d(nx, ny)
+
+
+@settings(max_examples=15, deadline=None)
+@given(kind=st.sampled_from(["graph", "lap2d"]), size=st.integers(0, 8),
+       seed=st.integers(0, 10_000), bs=st.sampled_from([2, 4, 8]),
+       w=st.sampled_from([2, 3, 4]))
+def test_orderings_are_valid_permutations(kind, size, seed, bs, w):
+    a = _random_instance(kind, size, seed)
+    n = a.shape[0]
+    for method in METHODS:
+        sysd = _order_system(sp.csr_matrix(a), None, method, bs, w)
+        perm = sysd.perm
+        # injective over the original unknowns, into the padded range
+        assert perm.shape == (n,)
+        assert len(np.unique(perm)) == n, method
+        assert perm.min() >= 0 and perm.max() < sysd.n_padded, method
+        # non-perm slots (if any) are exactly the dummy padding
+        if sysd.drop is not None:
+            assert sysd.n_padded - n == int(sysd.drop.sum()), method
+            assert not sysd.drop[perm].any(), method
+
+
+@settings(max_examples=15, deadline=None)
+@given(kind=st.sampled_from(["graph", "lap2d"]), size=st.integers(0, 8),
+       seed=st.integers(0, 10_000), bs=st.sampled_from([2, 4, 8]),
+       w=st.sampled_from([2, 3, 4]))
+def test_no_intra_round_edges_survive(kind, size, seed, bs, w):
+    """Rows of one execution round are mutually independent in A_bar."""
+    a = _random_instance(kind, size, seed)
+    for method in METHODS:
+        sysd = _order_system(sp.csr_matrix(a), None, method, bs, w)
+        coo = sp.coo_matrix(sysd.a_bar)
+        off = (coo.row != coo.col) & (coo.data != 0)
+        round_of = np.full(sysd.n_padded, -1, dtype=np.int64)
+        for s, rows in enumerate(sysd.fwd_rounds):
+            live = rows if sysd.drop is None else rows[~sysd.drop[rows]]
+            round_of[live] = s
+        same = round_of[coo.row[off]] == round_of[coo.col[off]]
+        # dummy rows (round -1) have no entries at all, so -1 == -1 never
+        # fires; any surviving same-round edge breaks the parallel sweep
+        assert not same.any(), method
+
+
+@settings(max_examples=15, deadline=None)
+@given(kind=st.sampled_from(["graph", "lap2d"]), size=st.integers(0, 8),
+       seed=st.integers(0, 10_000), bs=st.sampled_from([2, 4, 8]),
+       w=st.sampled_from([2, 3, 4]))
+def test_hbmc_respects_level1_block_membership(kind, size, seed, bs, w):
+    """Paper eq. 4.1: the secondary reordering moves unknowns only within
+    their level-1 block — BMC block p of color c maps into level-1 block
+    p // w of color c."""
+    from repro.core import block_multicolor_ordering, hbmc_from_bmc
+    a = _random_instance(kind, size, seed)
+    bmc = block_multicolor_ordering(sp.csr_matrix(a), bs)
+    hb = hbmc_from_bmc(bmc, w)
+    color_first_block = np.concatenate([[0],
+                                        np.cumsum(bmc.blocks_per_color)])
+    i = np.arange(bmc.n_padded)
+    g = i // bs                                   # BMC block, color-major
+    c = bmc.block_color[g]
+    p = g - color_first_block[c]                  # block index within color
+    f = hb.secondary_perm[i]                      # final HBMC index
+    lev1 = (f - hb.color_start[c]) // (bs * w)    # level-1 block of f
+    np.testing.assert_array_equal(lev1, p // w)
+    # and the color never changes
+    assert (f >= hb.color_start[c]).all()
+    assert (f < hb.color_start[c + 1]).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(kind=st.sampled_from(["graph", "lap2d"]), size=st.integers(0, 8),
+       seed=st.integers(0, 10_000), bs=st.sampled_from([2, 4, 8]),
+       w=st.sampled_from([2, 3, 4]), nb=st.sampled_from([1, 3]))
+def test_round_major_layout_roundtrips_bitwise(kind, size, seed, bs, w, nb):
+    """embed (b in) and extract (x out) invert each other bit for bit."""
+    a = _random_instance(kind, size, seed)
+    sysd = _order_system(sp.csr_matrix(a), None, "hbmc", bs, w)
+    l_bar = ic0(sysd.a_bar)
+    fused = fuse_round_major(*pack_factor(l_bar, sysd.fwd_rounds,
+                                          sysd.bwd_rounds, sysd.drop))
+    lay = fused.layout
+    rng = np.random.default_rng(seed)
+    shape = (sysd.n_padded,) if nb == 1 else (sysd.n_padded, nb)
+    v = rng.normal(size=shape)
+    if sysd.drop is not None:
+        v[sysd.drop] = 0.0                        # dummies have no position
+    rm = lay.embed(v)
+    assert rm.shape[0] == lay.m
+    np.testing.assert_array_equal(lay.extract(rm), v)
+    # holes (pad lanes) hold exact zeros after embed
+    flat = lay.rows.reshape(-1)
+    holes = flat == lay.n_slots - 1
+    assert not np.asarray(rm[holes]).any()

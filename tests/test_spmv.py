@@ -1,0 +1,255 @@
+"""SELL-w SpMV kernel family: oracle parity, plan integration, jaxpr.
+
+Pins the tentpole claims of the Pallas-native SpMV hot path:
+
+  1. the kernels match their jnp oracles (and the production XLA
+     ``spmv_sell`` path) BIT FOR BIT in interpret mode, across
+     f32/f64 × single/batched × padded tail slices × grid tilings;
+  2. a ``spmv_backend="pallas"`` plan reproduces the
+     ``spmv_backend="xla"`` PCG iteration counts exactly for all four
+     orderings × single/batched, and under a 1-device mesh;
+  3. the pallas plan's iteration contains no gather-based SpMV — the only
+     gathers live inside ``pallas_call`` kernels (asserted on the jaxpr);
+  4. the knob validates its inputs (pallas requires the SELL format).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import build_plan, make_sharded_spmv, pcg_iteration, solve_iccg
+from repro.core.iccg import spmv_sell, spmv_sell_batched
+from repro.core.matrices import graph_laplacian, laplace_2d
+from repro.core.plan import _make_spmv
+from repro.core.sell import pack_sell
+from repro.kernels import (sell_spmv, sell_spmv_batched, sell_spmv_block,
+                           sell_spmv_batched_ref, sell_spmv_ref)
+
+ORDERINGS = ("mc", "bmc", "hbmc", "natural")
+
+# n deliberately not a multiple of w -> the last slice is a padded tail
+MATRICES = [
+    ("lap2d_tail", laplace_2d(13, 11)),          # n = 143
+    ("graph_tail", graph_laplacian(157, avg_degree=5, seed=3)),
+]
+
+
+# ---------------------------------------------------------------------------
+# 1. Bitwise kernel == oracle == XLA path.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,a", MATRICES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("w", [4, 8])
+@pytest.mark.parametrize("batched", [False, True], ids=["single", "batched"])
+def test_kernel_matches_oracle_bitwise(name, a, dtype, w, batched):
+    sm = pack_sell(a, w)
+    vals = jnp.asarray(sm.vals, dtype=dtype)
+    cols = jnp.asarray(sm.cols)
+    n = a.shape[0]
+    assert sm.cols.shape[0] * w > n, "tail slice must be padded"
+    rng = np.random.default_rng(0)
+    shape = (n, 3) if batched else (n,)
+    x = jnp.asarray(rng.normal(size=shape), dtype=dtype)
+    if batched:
+        y = sell_spmv_batched(vals, cols, x, interpret=True)
+        y_ref = sell_spmv_batched_ref(vals, cols, x)
+        y_xla = spmv_sell_batched(vals, cols, x, n)
+    else:
+        y = sell_spmv(vals, cols, x, interpret=True)
+        y_ref = sell_spmv_ref(vals, cols, x)
+        y_xla = spmv_sell(vals, cols, x, n)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+    np.testing.assert_array_equal(np.asarray(y)[:n], np.asarray(y_xla))
+    # padded tail rows beyond n are exact zeros (all-zero vals lanes)
+    assert not np.asarray(y)[n:].any()
+    # correctness against the dense product
+    tol = 1e-4 if dtype == jnp.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(y, dtype=np.float64)[:n],
+                               a @ np.asarray(x, dtype=np.float64),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("slice_tile", [1, 3, 256])
+def test_grid_tiling_is_invisible(slice_tile):
+    """Tiling the slice axis over the grid never changes a bit (the tile
+    is padded with all-zero slices, cut after the call)."""
+    a = laplace_2d(9, 7)
+    sm = pack_sell(a, 4)
+    vals, cols = jnp.asarray(sm.vals), jnp.asarray(sm.cols)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=a.shape[0]))
+    xb = jnp.asarray(rng.normal(size=(a.shape[0], 2)))
+    y_ref = sell_spmv_ref(vals, cols, x)
+    yb_ref = sell_spmv_batched_ref(vals, cols, xb)
+    np.testing.assert_array_equal(
+        np.asarray(sell_spmv(vals, cols, x, slice_tile=slice_tile,
+                             interpret=True)), np.asarray(y_ref))
+    np.testing.assert_array_equal(
+        np.asarray(sell_spmv_batched(vals, cols, xb, slice_tile=slice_tile,
+                                     interpret=True)), np.asarray(yb_ref))
+
+
+def test_block_variant_dispatches_on_rank():
+    a = laplace_2d(10, 6)
+    sm = pack_sell(a, 4)
+    vals, cols = jnp.asarray(sm.vals), jnp.asarray(sm.cols)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=a.shape[0]))
+    xb = jnp.asarray(rng.normal(size=(a.shape[0], 3)))
+    np.testing.assert_array_equal(
+        np.asarray(sell_spmv_block(vals, cols, x, interpret=True)),
+        np.asarray(sell_spmv(vals, cols, x, interpret=True)))
+    np.testing.assert_array_equal(
+        np.asarray(sell_spmv_block(vals, cols, xb, interpret=True)),
+        np.asarray(sell_spmv_batched(vals, cols, xb, interpret=True)))
+
+
+# ---------------------------------------------------------------------------
+# 2. Plan integration: pallas SpMV == xla SpMV, iteration for iteration.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ORDERINGS)
+def test_plan_backend_parity_all_orderings(method):
+    """Acceptance: spmv_backend='pallas' reproduces the xla iteration
+    counts exactly (bitwise solutions, in fact — interpret-mode kernel
+    arithmetic is identical)."""
+    a = laplace_2d(14, 12)
+    b = np.random.default_rng(2).normal(size=a.shape[0])
+    rx = solve_iccg(a, b, method=method, block_size=8, w=4,
+                    spmv_format="sell")
+    rp = solve_iccg(a, b, method=method, block_size=8, w=4,
+                    spmv_format="sell", spmv_backend="pallas")
+    assert rp.spmv_backend == "pallas"
+    assert rx.result.iterations == rp.result.iterations
+    assert rp.result.converged
+    np.testing.assert_array_equal(rx.x, rp.x)
+
+
+@pytest.mark.parametrize("method", ORDERINGS)
+def test_plan_backend_parity_batched(method):
+    a = laplace_2d(12, 10)
+    bb = np.random.default_rng(3).normal(size=(a.shape[0], 4))
+    px = build_plan(a, method=method, block_size=8, w=4, spmv_format="sell")
+    pp = build_plan(a, method=method, block_size=8, w=4, spmv_format="sell",
+                    spmv_backend="pallas")
+    rx, rp = px.solve_batched(bb), pp.solve_batched(bb)
+    np.testing.assert_array_equal(rx.result.iterations, rp.result.iterations)
+    np.testing.assert_array_equal(rx.x, rp.x)
+    # warm solves reuse the cached jitted PCG: zero further host setup
+    assert pp.setup_count == 1
+
+
+def test_plan_backend_parity_under_mesh():
+    """The sharded SpMV path (sell_spmv_block inside shard_map) matches
+    the xla sharded path on a 1-device mesh — same collective structure,
+    same floats."""
+    a = laplace_2d(12, 10)
+    b = np.random.default_rng(4).normal(size=a.shape[0])
+    bb = np.random.default_rng(5).normal(size=(a.shape[0], 3))
+    mesh = jax.make_mesh((1,), ("data",))
+    px = build_plan(a, method="hbmc", block_size=8, w=4, spmv_format="sell",
+                    mesh=mesh)
+    pp = build_plan(a, method="hbmc", block_size=8, w=4, spmv_format="sell",
+                    mesh=mesh, spmv_backend="pallas")
+    rx, rp = px.solve(b), pp.solve(b)
+    assert rx.result.iterations == rp.result.iterations
+    np.testing.assert_array_equal(rx.x, rp.x)
+    rbx, rbp = px.solve_batched(bb), pp.solve_batched(bb)
+    np.testing.assert_array_equal(rbx.result.iterations,
+                                  rbp.result.iterations)
+    np.testing.assert_array_equal(rbx.x, rbp.x)
+
+
+def test_sharded_spmv_kernel_matches_xla_bitwise():
+    a = laplace_2d(11, 9)
+    n = a.shape[0]
+    sm = pack_sell(a, 4)
+    vals, cols = jnp.asarray(sm.vals), jnp.asarray(sm.cols)
+    mesh = jax.make_mesh((1,), ("data",))
+    rng = np.random.default_rng(6)
+    for batched, shape in ((False, (n,)), (True, (n, 3))):
+        x = jnp.asarray(rng.normal(size=shape))
+        f_x = make_sharded_spmv("sell", n, mesh, "data", vals, cols, batched)
+        f_p = make_sharded_spmv("sell", n, mesh, "data", vals, cols, batched,
+                                spmv_backend="pallas", interpret=True)
+        np.testing.assert_array_equal(np.asarray(f_x(x)), np.asarray(f_p(x)))
+
+
+# ---------------------------------------------------------------------------
+# 3. Jaxpr: the pallas plan's iteration has no gather-based SpMV.
+# ---------------------------------------------------------------------------
+
+def _primitives(fn, *args):
+    """Primitive names in fn's jaxpr, NOT descending into pallas_call
+    bodies (a kernel's internal VMEM gather is the point, not a leak)."""
+    out = set()
+
+    def walk(j):
+        for eqn in j.eqns:
+            out.add(eqn.primitive.name)
+            if eqn.primitive.name == "pallas_call":
+                continue
+            for p in eqn.params.values():
+                for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                    if hasattr(sub, "jaxpr"):        # ClosedJaxpr
+                        walk(sub.jaxpr)
+                    elif hasattr(sub, "eqns"):       # raw Jaxpr
+                        walk(sub)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return out
+
+
+def test_pallas_spmv_closure_has_no_gather():
+    a = laplace_2d(10, 8)
+    sm = pack_sell(a, 4)
+    vals, cols = jnp.asarray(sm.vals), jnp.asarray(sm.cols)
+    n = a.shape[0]
+    spmv_p = _make_spmv("sell", n, vals, cols, batched=False,
+                        spmv_backend="pallas", interpret=True)
+    spmv_x = _make_spmv("sell", n, vals, cols, batched=False)
+    prims_p = _primitives(spmv_p, jnp.zeros((n,)))
+    prims_x = _primitives(spmv_x, jnp.zeros((n,)))
+    assert "pallas_call" in prims_p
+    assert not any("gather" in p for p in prims_p), prims_p
+    assert any("gather" in p for p in prims_x)
+
+
+def test_full_pallas_iteration_has_no_gather():
+    """With backend='pallas' AND spmv_backend='pallas', one PCG iteration
+    lowers to exactly two pallas_call kernels (fused trisolve + SpMV) and
+    vector work — zero gather/scatter primitives outside the kernels."""
+    a = laplace_2d(10, 8)
+    plan = build_plan(a, method="hbmc", block_size=8, w=4,
+                      spmv_format="sell", backend="pallas",
+                      spmv_backend="pallas", interpret=True)
+    spmv = _make_spmv("sell", plan._spmv_n, plan._spmv_vals,
+                      plan._spmv_cols, batched=False,
+                      spmv_backend="pallas", interpret=True)
+    step = pcg_iteration(spmv, plan._precond)
+    m = plan._precond.m
+    z = jnp.zeros((m,))
+    prims = _primitives(step, z, z, z, jnp.asarray(1.0))
+    assert "pallas_call" in prims
+    assert not any("gather" in p for p in prims), prims
+    assert not any("scatter" in p for p in prims), prims
+
+
+# ---------------------------------------------------------------------------
+# 4. Validation.
+# ---------------------------------------------------------------------------
+
+def test_pallas_spmv_requires_sell_format():
+    a = laplace_2d(8, 8)
+    with pytest.raises(ValueError, match="sell"):
+        build_plan(a, method="hbmc", block_size=4, w=2,
+                   spmv_backend="pallas")          # default format is ell
+    with pytest.raises(ValueError, match="spmv backend"):
+        build_plan(a, method="hbmc", block_size=4, w=2,
+                   spmv_format="sell", spmv_backend="banana")
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="sell"):
+        make_sharded_spmv("ell", a.shape[0], mesh, "data", None, None,
+                          False, spmv_backend="pallas")
