@@ -6,9 +6,9 @@ from .hbmc import (HBMCOrdering, hbmc_from_bmc, hbmc_ordering,
                    pad_system_hbmc, verify_level2_structure)
 from .ic0 import (IC0Structure, ic0, ic0_error, ic0_refactor, ic0_rounds,
                   ic0_structure, sequential_ic_solve)
-from .iccg import (BatchedPCGResult, PCGResult, make_sharded_spmv, pcg,
-                   pcg_batched, pcg_iteration, spmv_ell, spmv_ell_batched,
-                   spmv_sell, spmv_sell_batched)
+from .iccg import (BatchedPCGResult, PCGResult, SlabState,
+                   make_sharded_spmv, pcg, pcg_batched, pcg_iteration,
+                   spmv_ell, spmv_ell_batched, spmv_sell, spmv_sell_batched)
 from .matrices import PAPER_PROBLEMS, PAPER_SHIFTS, paper_problem
 from .plan import SetupBreakdown, SolverPlan, build_plan
 from .sell import (FusedRoundMajorTables, RoundMajorLayout, RoundMajorTables,

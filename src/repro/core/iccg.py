@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -254,6 +254,11 @@ def _pcg_batched_device(spmv: Callable[[jax.Array], jax.Array],
                         record_history: bool = False):
     """Device core of ``pcg_batched``; returns jax arrays, jittable."""
     b = jnp.asarray(b)
+    if b.ndim == 1:
+        raise ValueError(
+            f"pcg_batched expects b of shape (n, B), got a 1-D vector of "
+            f"shape {b.shape}; a single RHS must be passed as a one-column "
+            f"slab b[:, None] (B = 1), or use pcg")
     if b.ndim != 2:
         raise ValueError(f"pcg_batched expects b of shape (n, B), got "
                          f"{b.shape}")
@@ -350,3 +355,106 @@ def pcg_batched(spmv: Callable[[jax.Array], jax.Array],
     return BatchedPCGResult(x=np.asarray(x), iterations=np.asarray(iters),
                             relres=relres, converged=relres < rtol,
                             n_steps=int(step), history=np.asarray(hist))
+
+
+# ---------------------------------------------------------------------------
+# Slab PCG: quantum-stepped batched PCG with slot-level entry/retirement.
+#
+# The serving layer (repro.serve) keeps B independent PCG solves resident in
+# one (n, B) slab and advances them a bounded number of while_loop trips per
+# dispatch.  Between dispatches the host retires converged columns and packs
+# fresh right-hand sides into the freed slots; a ``fresh`` mask tells the
+# next dispatch which columns to (re)initialize.  Continuing columns are
+# carried through ``jnp.where`` untouched, so quantum boundaries do not
+# perturb their float sequences: a column sees the exact same arithmetic it
+# would in one uninterrupted ``_pcg_batched_device`` run at the same width.
+# ---------------------------------------------------------------------------
+
+
+class SlabState(NamedTuple):
+    """Device-side carry of a resident PCG slab ((m, B) state vectors).
+
+    ``fresh[j]`` marks column j for (re)initialization at the next dispatch:
+    its ``r`` must already hold the embedded RHS (or zeros for an empty
+    slot — zero residual initializes to ``relres = 0 < rtol``, i.e. inert).
+    All other per-column entries of a fresh column are ignored and
+    overwritten at dispatch entry.
+    """
+    x: jax.Array        # (m, B) iterates
+    r: jax.Array        # (m, B) residuals (RHS for fresh columns)
+    p: jax.Array        # (m, B) search directions
+    rz: jax.Array       # (B,)   carried (r, z) inner products
+    bnorm: jax.Array    # (B,)   ||b|| per column (1.0 for zero columns)
+    active: jax.Array   # (B,)   still iterating
+    iters: jax.Array    # (B,)   per-column iteration counts (int32)
+    relres: jax.Array   # (B,)   last relative residual norms
+    fresh: jax.Array    # (B,)   initialize at next dispatch entry
+
+
+def _pcg_slab_device(spmv: Callable[[jax.Array], jax.Array],
+                     precond: Callable[[jax.Array], jax.Array],
+                     state: SlabState,
+                     rtol: float = 1e-7,
+                     maxiter: int = 10_000,
+                     quantum: int = 16):
+    """Advance a PCG slab by at most ``quantum`` iterations; jittable.
+
+    Entry initialization applies only to columns with ``fresh`` set (their
+    ``r`` holds the embedded RHS): exactly the ``_pcg_batched_device`` init
+    per column.  The loop body performs the identical arithmetic sequence
+    as ``_pcg_batched_device`` — converged/inert columns are frozen by
+    ``alpha = beta = 0`` — with one addition: a per-column
+    ``iters < maxiter`` cutoff (columns enter the slab at different times,
+    so the global step counter cannot bound them).  Returns
+    ``(SlabState, steps)`` with ``fresh`` cleared and ``steps`` the number
+    of while_loop trips taken this dispatch.
+    """
+    x, r, p, rz, bnorm, active, iters, relres, fresh = state
+
+    # per-column init for fresh columns; continuing columns pass through
+    # every `where` bitwise-untouched (the precond/einsum results for them
+    # are computed and discarded — column-wise ops, no cross-column flow)
+    z = precond(r)
+    rz0 = jnp.einsum("nb,nb->b", r, z)
+    nrm0 = jnp.linalg.norm(r, axis=0)
+    bnorm0 = jnp.where(nrm0 == 0, 1.0, nrm0)
+    relres0 = nrm0 / bnorm0
+    x = jnp.where(fresh[None, :], jnp.zeros_like(x), x)
+    p = jnp.where(fresh[None, :], z, p)
+    rz = jnp.where(fresh, rz0, rz)
+    bnorm = jnp.where(fresh, bnorm0, bnorm)
+    iters = jnp.where(fresh, 0, iters)
+    relres = jnp.where(fresh, relres0, relres)
+    active = jnp.where(fresh, relres0 >= rtol, active)
+
+    def relres_of(rr):
+        return jnp.linalg.norm(rr, axis=0) / bnorm
+
+    def cond(carry):
+        _, _, _, _, active_, _, _, step = carry
+        return jnp.any(active_) & (step < quantum)
+
+    def body(carry):
+        x, r, p, rz, active, iters, _, step = carry
+        ap = spmv(p)
+        pap = jnp.einsum("nb,nb->b", p, ap)
+        alpha = jnp.where(active, rz / pap, 0.0)
+        x = x + alpha[None, :] * p
+        r = r - alpha[None, :] * ap
+        z = precond(r)
+        rz_new = jnp.einsum("nb,nb->b", r, z)
+        beta = jnp.where(active, rz_new / rz, 0.0)
+        p = jnp.where(active[None, :], z + beta[None, :] * p, p)
+        rz = jnp.where(active, rz_new, rz)
+        iters = iters + active.astype(jnp.int32)
+        relres = relres_of(r)
+        active = active & (relres >= rtol) & (iters < maxiter)
+        return (x, r, p, rz, active, iters, relres, step + 1)
+
+    carry = (x, r, p, rz, active, iters, relres, jnp.asarray(0))
+    x, r, p, rz, active, iters, relres, step = jax.lax.while_loop(
+        cond, body, carry)
+    out = SlabState(x=x, r=r, p=p, rz=rz, bnorm=bnorm, active=active,
+                    iters=iters, relres=relres,
+                    fresh=jnp.zeros_like(fresh))
+    return out, step

@@ -40,9 +40,10 @@ from .coloring import block_multicolor_ordering, multicolor_ordering, pad_system
 from .graph import permute_system
 from .hbmc import hbmc_from_bmc, pad_system_hbmc
 from .ic0 import ic0_refactor, ic0_structure
-from .iccg import (BatchedPCGResult, PCGResult, _pcg_batched_device,
-                   _pcg_device, make_sharded_spmv, spmv_ell,
-                   spmv_ell_batched, spmv_sell, spmv_sell_batched)
+from .iccg import (BatchedPCGResult, PCGResult, SlabState,
+                   _pcg_batched_device, _pcg_device, _pcg_slab_device,
+                   make_sharded_spmv, spmv_ell, spmv_ell_batched, spmv_sell,
+                   spmv_sell_batched)
 from .trisolve import (BACKENDS, LAYOUTS, DistributedRoundMajorPreconditioner,
                        HBMCPreconditioner, RoundMajorPreconditioner,
                        build_preconditioner_from_rounds,
@@ -509,6 +510,212 @@ class SolverPlan:
                  if self._rm is not None else np.asarray(x_dev))
         return np.asarray(x_bar[self._sysd.perm])
 
+    def _check_slab(self, b: np.ndarray, who: str) -> np.ndarray:
+        """Validate a multi-RHS slab: 2-D (n, B) with the plan's dtype.
+
+        A 1-D b gets its own error (naming the B=1 spelling) and a float
+        dtype mismatch is an error rather than a silent cast — the packed
+        operands are ``self.dtype``, and quietly up/down-casting b would
+        produce a result that matches neither precision's solve.
+        """
+        b = np.asarray(b)
+        if b.ndim == 1:
+            raise ValueError(
+                f"{who} expects b of shape ({self.n}, B), got a 1-D vector "
+                f"of shape {b.shape}; pass a single RHS as the one-column "
+                f"slab b[:, None] (B = 1), or use plan.solve")
+        if b.ndim != 2 or b.shape[0] != self.n:
+            raise ValueError(f"{who} expects b of shape "
+                             f"({self.n}, B), got {b.shape}")
+        if np.issubdtype(b.dtype, np.floating) and b.dtype != self._np_dtype:
+            raise TypeError(
+                f"{who}: b has dtype {b.dtype} but the plan's packed "
+                f"operands are {self._np_dtype}; cast b explicitly "
+                f"(b.astype({self._np_dtype})) to opt in")
+        return np.asarray(b, dtype=self._np_dtype)
+
+    # -- slab serving primitives (see repro.serve) --------------------------
+
+    @property
+    def slab_m(self) -> int:
+        """Length of a device-side state column in the solve layout."""
+        return self._rm.m if self._rm is not None else self.n_padded
+
+    def embed_rhs(self, b: np.ndarray) -> jax.Array:
+        """Embed one RHS (original ordering, shape (n,)) into a device
+        column of the solve layout (shape (slab_m,)) — the host half of
+        packing a slab slot."""
+        b = np.asarray(b, dtype=self._np_dtype)
+        if b.shape != (self.n,):
+            raise ValueError(f"plan.embed_rhs expects b of shape "
+                             f"({self.n},), got {b.shape}")
+        b_bar = np.zeros(self.n_padded, dtype=self._np_dtype)
+        b_bar[self._sysd.perm] = b
+        return self._embed(b_bar)
+
+    def extract_solution(self, x_col) -> np.ndarray:
+        """Undo ``embed_rhs``: device column (slab_m,) -> x in the
+        caller's original ordering (n,)."""
+        return self._extract(x_col)
+
+    def new_slab_state(self, slab_width: int) -> SlabState:
+        """An all-empty resident slab: every slot fresh with a zero RHS
+        (zero residual initializes inert — see ``SlabState``)."""
+        if slab_width < 1:
+            raise ValueError(f"slab_width must be >= 1, got {slab_width}")
+        m, dt = self.slab_m, self.dtype
+        zeros = jnp.zeros((m, slab_width), dtype=dt)
+        state = SlabState(
+            x=zeros, r=zeros, p=zeros,
+            rz=jnp.zeros((slab_width,), dtype=dt),
+            bnorm=jnp.ones((slab_width,), dtype=dt),
+            active=jnp.zeros((slab_width,), dtype=bool),
+            iters=jnp.zeros((slab_width,), dtype=jnp.int32),
+            relres=jnp.zeros((slab_width,), dtype=dt),
+            fresh=jnp.ones((slab_width,), dtype=bool))
+        if self.mesh is not None:   # slab state is replicated on the mesh
+            sh = NamedSharding(self.mesh, P())
+            state = SlabState(*(jax.device_put(v, sh) for v in state))
+        return state
+
+    def _slab_fn(self, rtol: float, maxiter: int, quantum: int):
+        """Jitted quantum-step over a resident slab; cached per signature
+        exactly like ``_pcg_fn`` (operands as traced args where possible,
+        so ``refactor`` never retraces)."""
+        key = ("slab", float(rtol), int(maxiter), int(quantum))
+        fn = self._pcg_cache.get(key)
+        if fn is not None:
+            return fn
+        fmt, n_op = self.spmv_format, self._spmv_n
+        backend, interpret = self.backend, self.interpret
+        spmv_backend = self.spmv_backend
+
+        if self.mesh is not None:
+            mesh, ax = self.mesh, self.mesh_axis
+
+            def run(tables, sv, sc, state):
+                self._trace_count += 1
+                pre = DistributedRoundMajorPreconditioner(tables=tables,
+                                                          mesh=mesh, axis=ax)
+                spmv = make_sharded_spmv(fmt, n_op, mesh, ax, sv, sc,
+                                         True, spmv_backend=spmv_backend,
+                                         interpret=interpret)
+                return _pcg_slab_device(spmv, pre.apply_batched, state,
+                                        rtol=rtol, maxiter=maxiter,
+                                        quantum=quantum)
+            fn = jax.jit(run)
+        elif self.layout == "round_major":
+            def run(tables, sv, sc, state):
+                self._trace_count += 1
+                pre = RoundMajorPreconditioner(tables=tables,
+                                               backend=backend,
+                                               interpret=interpret)
+                spmv = _make_spmv(fmt, n_op, sv, sc, True,
+                                  spmv_backend=spmv_backend,
+                                  interpret=interpret)
+                return _pcg_slab_device(spmv, pre.apply_batched, state,
+                                        rtol=rtol, maxiter=maxiter,
+                                        quantum=quantum)
+            fn = jax.jit(run)
+        elif backend == "xla":
+            n_final = self.n_padded
+
+            def run(fwd, bwd, sv, sc, state):
+                self._trace_count += 1
+                pre = HBMCPreconditioner(fwd=fwd, bwd=bwd, n_final=n_final,
+                                         backend="xla", kernel=None)
+                spmv = _make_spmv(fmt, n_op, sv, sc, True,
+                                  spmv_backend=spmv_backend,
+                                  interpret=interpret)
+                return _pcg_slab_device(spmv, pre.apply_batched, state,
+                                        rtol=rtol, maxiter=maxiter,
+                                        quantum=quantum)
+            fn = jax.jit(run)
+        else:
+            # index + pallas: operands are closure constants (cache cleared
+            # on refactor, same as _pcg_fn)
+            pre = self._precond
+            spmv = _make_spmv(fmt, n_op, self._spmv_vals, self._spmv_cols,
+                              True, spmv_backend=spmv_backend,
+                              interpret=interpret)
+
+            def run(state):
+                self._trace_count += 1
+                return _pcg_slab_device(spmv, pre.apply_batched, state,
+                                        rtol=rtol, maxiter=maxiter,
+                                        quantum=quantum)
+            fn = jax.jit(run)
+        self._pcg_cache[key] = fn
+        return fn
+
+    def run_slab(self, state: SlabState, rtol: float = 1e-7,
+                 maxiter: int = 10_000,
+                 quantum: int = 16) -> tuple[SlabState, jax.Array]:
+        """Advance a resident slab by at most ``quantum`` PCG iterations.
+
+        Columns flagged ``fresh`` are (re)initialized from their ``r``
+        at entry; continuing columns resume bitwise where they left off
+        (dispatch boundaries do not perturb their float sequences).
+        Returns ``(new_state, steps_taken)``.
+        """
+        fn = self._slab_fn(rtol, maxiter, quantum)
+        if self.layout == "round_major":
+            return fn(self._precond.tables, self._spmv_vals,
+                      self._spmv_cols, state)
+        if self.backend == "xla":
+            return fn(self._precond.fwd, self._precond.bwd,
+                      self._spmv_vals, self._spmv_cols, state)
+        return fn(state)
+
+    def solve_slab(self, b: np.ndarray, slab_width: int = 1,
+                   rtol: float = 1e-7, maxiter: int = 10_000,
+                   slot: int = 0) -> ICCGReport:
+        """Solve one RHS through the slab path at a given resident width.
+
+        Packs ``b`` into ``slot`` of an otherwise-empty
+        width-``slab_width`` slab and runs it to convergence in a single
+        dispatch.  This is the standalone oracle for serving: a column
+        served through ``repro.serve.SolverService`` at slab width B in
+        slot s is bitwise equal to
+        ``plan.solve_slab(b, slab_width=B, slot=s)`` — slab columns are
+        independent of their neighbours' contents and of dispatch
+        boundaries, but (width, slot) pin the lowered reduction trees (at
+        some widths XLA emits lane-position-dependent reductions; B = 2
+        does on CPU).  At ``slab_width=1`` it is bitwise equal to
+        ``plan.solve_batched(b[:, None])``.  Iteration counts equal the
+        single-RHS ``plan.solve`` counts at EVERY width and slot; iterates
+        agree with ``plan.solve`` to reduction-order rounding only (XLA
+        lowers the batched ``einsum`` dots differently from ``vdot``).
+        """
+        t0 = time.perf_counter()
+        b = np.asarray(b, dtype=self._np_dtype)
+        if b.shape != (self.n,):
+            raise ValueError(f"plan.solve_slab expects b of shape "
+                             f"({self.n},), got {b.shape}")
+        if not 0 <= slot < slab_width:
+            raise ValueError(f"slot {slot} out of range for slab_width "
+                             f"{slab_width}")
+        state = self.new_slab_state(slab_width)
+        state = state._replace(
+            r=state.r.at[:, slot].set(self.embed_rhs(b)))
+        t1 = time.perf_counter()
+        state, _ = self.run_slab(state, rtol=rtol, maxiter=maxiter,
+                                 quantum=maxiter)
+        x = jax.block_until_ready(state.x)
+        t2 = time.perf_counter()
+        x_out = self.extract_solution(x[:, slot])
+        relres = float(state.relres[slot])
+        res = PCGResult(x=x_out, iterations=int(state.iters[slot]),
+                        relres=relres, converged=relres < rtol,
+                        history=np.zeros((0,)))
+        return ICCGReport(
+            method=self.method, result=res, n=self.n,
+            n_padded=self.n_padded, n_colors=self.n_colors,
+            n_rounds=self.n_rounds, setup_seconds=t1 - t0,
+            solve_seconds=t2 - t1, lane_occupancy=self.lane_occupancy,
+            x=x_out, backend=self.backend, layout=self.layout,
+            spmv_backend=self.spmv_backend)
+
     def solve(self, b: np.ndarray, rtol: float = 1e-7,
               maxiter: int = 10_000,
               record_history: bool = False) -> ICCGReport:
@@ -548,10 +755,7 @@ class SolverPlan:
         """Solve A x_j = b_j for all columns of ``b`` ((n, B)) in one PCG
         loop, reusing every cached setup product."""
         t0 = time.perf_counter()
-        b = np.asarray(b, dtype=self._np_dtype)
-        if b.ndim != 2 or b.shape[0] != self.n:
-            raise ValueError(f"plan.solve_batched expects b of shape "
-                             f"({self.n}, B), got {b.shape}")
+        b = self._check_slab(b, "plan.solve_batched")
         b_bar = np.zeros((self.n_padded, b.shape[1]), dtype=self._np_dtype)
         b_bar[self._sysd.perm] = b
         b_dev = self._embed(b_bar)

@@ -70,7 +70,10 @@ def solve_iccg_batched(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
                        lane_multiple: int = 1,
                        spmv_backend: str = "xla") -> BatchedICCGReport:
     """Solve A x_j = b_j for all columns of ``b`` ((n, B)) in one PCG loop."""
-    b = np.asarray(b)
+    # the caller named `dtype=` explicitly, so casting b to it here is the
+    # documented opt-in; plan.solve_batched itself rejects float-dtype
+    # mismatches rather than silently casting
+    b = np.asarray(b, dtype=np.dtype(jnp.dtype(dtype)))
     if b.ndim != 2:
         raise ValueError(f"solve_iccg_batched expects b of shape (n, B), "
                          f"got {b.shape}")

@@ -1,0 +1,14 @@
+"""Serving layers: the solver service (solver.py) and LM steps (step.py).
+
+``step`` is not imported here — it pulls in ``repro.models``; import it
+explicitly (``from repro.serve import step``) when needed.
+"""
+from .solver import (DEFAULT_COSTS, CacheStats, Completed, PlanBusyError,
+                     PlanCache, PlanKey, SolverService, VirtualClock,
+                     WallClock, pattern_fingerprint, values_fingerprint)
+
+__all__ = [
+    "DEFAULT_COSTS", "CacheStats", "Completed", "PlanBusyError",
+    "PlanCache", "PlanKey", "SolverService", "VirtualClock", "WallClock",
+    "pattern_fingerprint", "values_fingerprint",
+]

@@ -1,0 +1,624 @@
+"""Solver-as-a-service: continuous batching of RHS streams over warm plans.
+
+The HBMC pipeline's expensive products — ordering, rounds, IC(0) factor,
+packed tables — are all cached inside a ``SolverPlan``; this module
+amortizes them across *clients*:
+
+``PlanCache``
+    LRU cache of built plans keyed by sparsity-pattern fingerprint (a hash
+    of the CSR ``indptr``/``indices``) plus every build knob that changes
+    the compiled solver (method, backend, dtype, ...).  A request whose
+    pattern is cached but whose values changed takes the
+    ``plan.refactor`` fast path — numeric factorization only, zero
+    retrace — instead of a full rebuild.  Plans with in-flight slabs are
+    *pinned* and never evicted.
+
+``SolverService``
+    A request queue that packs heterogeneous right-hand sides into
+    resident PCG slabs of a configurable width (``plan.run_slab``) and
+    advances each slab a bounded ``quantum`` of iterations per dispatch.
+    Converged columns retire between dispatches — they report their
+    iteration count, free their slot, and a fresh queued request is packed
+    in on the next dispatch — so a slab never runs every column to the
+    slowest straggler.
+
+Numerical contract (pinned by tests/test_serve_solver.py): a request
+served at slab width B in slot s is bitwise equal to the standalone
+``plan.solve_slab(b, slab_width=B, slot=s)`` on a fresh plan —
+independent of which requests shared its slab, of dispatch quantum, and
+of retire/refill interleaving.  (Width and slot pin the lowered
+reduction trees; at B = 1 the oracle coincides with
+``plan.solve_batched(b[:, None])``.)  Iteration counts equal the
+single-RHS ``plan.solve`` counts at every width and slot.
+
+Scheduling is single-threaded and deterministic: ``step()`` advances the
+whole service one admit → pack → dispatch → retire cycle, and a
+``VirtualClock`` with an event cost model replaces wall time in tests (no
+sleeps, no threads).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import OrderedDict
+from typing import Any, Callable
+
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core.iccg import SlabState
+from repro.core.plan import SolverPlan, build_plan
+
+# ---------------------------------------------------------------------------
+# Fingerprints and cache keys
+# ---------------------------------------------------------------------------
+
+
+def _as_csr(a: sp.spmatrix) -> sp.csr_matrix:
+    a = sp.csr_matrix(a)
+    a.sort_indices()
+    return a
+
+
+def pattern_fingerprint(a: sp.spmatrix) -> str:
+    """Hash of the sparsity pattern only (shape + CSR indptr/indices)."""
+    a = _as_csr(a)
+    h = hashlib.sha1()
+    h.update(np.asarray(a.shape, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(a.indptr, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(a.indices, dtype=np.int64).tobytes())
+    return h.hexdigest()
+
+
+def values_fingerprint(a: sp.spmatrix) -> str:
+    """Hash of the numeric values (CSR data, canonical index order)."""
+    a = _as_csr(a)
+    return hashlib.sha1(np.ascontiguousarray(a.data).tobytes()).hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """Everything that decides whether two requests can share one plan.
+
+    Pattern fingerprint + the build knobs that change the compiled solver.
+    Two matrices with equal keys but different values share the plan
+    through ``refactor``; anything else is a distinct cache entry.
+    """
+    pattern: str
+    n: int
+    method: str
+    block_size: int
+    w: int
+    shift: float
+    spmv_format: str
+    dtype: str
+    backend: str
+    spmv_backend: str
+    layout: str
+    interpret: bool | None
+    lane_multiple: int
+
+    @classmethod
+    def from_matrix(cls, a: sp.spmatrix, *, method: str = "hbmc",
+                    block_size: int = 32, w: int = 8, shift: float = 0.0,
+                    spmv_format: str = "ell", dtype=jnp.float64,
+                    backend: str = "xla", interpret: bool | None = None,
+                    layout: str = "round_major", lane_multiple: int = 1,
+                    spmv_backend: str = "xla",
+                    **extra) -> tuple["PlanKey", sp.csr_matrix]:
+        """Key for (a, knobs); also returns the canonicalized CSR matrix."""
+        if extra.get("mesh") is not None:
+            raise ValueError("mesh plans are not cacheable: a Mesh binds "
+                             "the plan to a device set; serve single-device "
+                             "plans (or shard outside the service)")
+        extra.pop("mesh", None)
+        if extra:
+            raise TypeError(f"unknown plan knobs: {sorted(extra)}")
+        a = _as_csr(a)
+        key = cls(pattern=pattern_fingerprint(a), n=int(a.shape[0]),
+                  method=method, block_size=int(block_size), w=int(w),
+                  shift=float(shift), spmv_format=spmv_format,
+                  dtype=str(np.dtype(jnp.dtype(dtype))), backend=backend,
+                  spmv_backend=spmv_backend, layout=layout,
+                  interpret=interpret,
+                  lane_multiple=int(lane_multiple))
+        return key, a
+
+
+class PlanBusyError(RuntimeError):
+    """Raised when a value-change refactor targets a pinned (in-flight)
+    plan: refactoring would corrupt resident slab columns mid-solve."""
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    refactors: int = 0
+    evictions: int = 0
+    pinned_overflow: int = 0   # capacity exceeded but every entry pinned
+
+    @property
+    def requests(self) -> int:
+        return self.hits + self.misses + self.refactors
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.requests
+        # a refactor reuses the expensive setup products: count it warm
+        return (self.hits + self.refactors) / n if n else 0.0
+
+
+@dataclasses.dataclass
+class _CacheEntry:
+    plan: SolverPlan
+    values_fp: str
+    pins: int = 0
+
+
+class PlanCache:
+    """LRU cache of built ``SolverPlan``s with pin-aware eviction.
+
+    ``get`` returns ``(plan, status)`` with status one of:
+
+    * ``"hit"``       — pattern and values both cached
+    * ``"refactor"``  — pattern cached, values renewed via the numeric
+      fast path (raises ``PlanBusyError`` if the entry is pinned)
+    * ``"miss"``      — full build (evicting LRU *unpinned* entries if
+      over capacity; a ``pin=True`` newcomer is protected by its own pin,
+      so when every resident is pinned the cache overflows temporarily
+      and records ``pinned_overflow``, while an unpinned newcomer is
+      simply not retained)
+
+    ``pin``/``unpin`` bracket in-flight use (the ``SolverService`` pins a
+    key while a slab group holds resident columns, via ``get(pin=True)``);
+    pinned entries are never evicted and never refactored out from under
+    their slabs.
+    """
+
+    def __init__(self, capacity: int = 8,
+                 build: Callable[..., SolverPlan] = build_plan):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._build = build
+        self._entries: OrderedDict[PlanKey, _CacheEntry] = OrderedDict()
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: PlanKey) -> bool:
+        return key in self._entries
+
+    def keys(self):
+        return list(self._entries)
+
+    def pins(self, key: PlanKey) -> int:
+        return self._entries[key].pins if key in self._entries else 0
+
+    def get(self, a: sp.spmatrix, pin: bool = False,
+            **knobs) -> tuple[SolverPlan, str]:
+        """Plan for (a, knobs): cached, refactored, or freshly built.
+
+        ``pin=True`` pins the entry atomically with the lookup/insert —
+        the caller must balance it with ``unpin`` when its slab drains.
+        """
+        key, a = PlanKey.from_matrix(a, **knobs)
+        vfp = values_fingerprint(a)
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._entries.move_to_end(key)
+            if entry.values_fp == vfp:
+                entry.pins += pin
+                self.stats.hits += 1
+                return entry.plan, "hit"
+            if entry.pins:
+                raise PlanBusyError(
+                    f"plan {key.pattern[:12]} has {entry.pins} in-flight "
+                    f"slab(s); refactoring now would corrupt resident "
+                    f"columns — drain the slab first")
+            entry.plan.refactor(a)
+            entry.values_fp = vfp
+            entry.pins += pin
+            self.stats.refactors += 1
+            return entry.plan, "refactor"
+        plan = self._build(a, **knobs)
+        self._entries[key] = _CacheEntry(plan=plan, values_fp=vfp,
+                                         pins=int(pin))
+        self.stats.misses += 1
+        self._evict()
+        return plan, "miss"
+
+    def _evict(self) -> None:
+        while len(self._entries) > self.capacity:
+            victim = next((k for k, e in self._entries.items()
+                           if e.pins == 0), None)
+            if victim is None:
+                self.stats.pinned_overflow += 1
+                return
+            del self._entries[victim]
+            self.stats.evictions += 1
+
+    def pin(self, key: PlanKey) -> None:
+        self._entries[key].pins += 1
+
+    def unpin(self, key: PlanKey) -> None:
+        entry = self._entries[key]
+        if entry.pins <= 0:
+            raise RuntimeError(f"unpin without pin for {key.pattern[:12]}")
+        entry.pins -= 1
+        self._evict()   # a deferred eviction may now be possible
+
+
+# ---------------------------------------------------------------------------
+# Clocks
+# ---------------------------------------------------------------------------
+
+
+class WallClock:
+    """Real time; event charges are no-ops (the events take real time)."""
+
+    simulated = False
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def charge(self, event: str, n: int = 1) -> None:
+        pass
+
+
+#: Default virtual event costs (arbitrary deterministic units): a build is
+#: an order of magnitude above a refactor, which dwarfs per-dispatch work.
+DEFAULT_COSTS = {
+    "build": 1.0,
+    "refactor": 0.1,
+    "hit": 0.0,
+    "dispatch": 0.05,
+    "iteration": 0.01,
+    "pack": 0.001,
+    "retire": 0.001,
+}
+
+
+class VirtualClock:
+    """Deterministic simulated time driven by an event cost model.
+
+    Tests drive the service with seeded arrival traces against this clock:
+    no wall-clock sleeps, no threads, and every latency/throughput number
+    reproduces bit-for-bit across runs.
+    """
+
+    simulated = True
+
+    def __init__(self, costs: dict[str, float] | None = None):
+        self.t = 0.0
+        self.costs = dict(DEFAULT_COSTS)
+        if costs:
+            self.costs.update(costs)
+
+    def now(self) -> float:
+        return self.t
+
+    def charge(self, event: str, n: int = 1) -> None:
+        self.t += n * self.costs.get(event, 0.0)
+
+    def advance_to(self, t: float) -> None:
+        if t > self.t:
+            self.t = t
+
+
+# ---------------------------------------------------------------------------
+# Requests, slab groups, and the service
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    key: PlanKey
+    values_fp: str
+    a: sp.csr_matrix          # kept until packed (plan build / refactor)
+    b: np.ndarray
+    tag: Any
+    arrival: float
+    started: float = -1.0
+    plan_status: str = ""     # cache status when its slab group resolved
+
+
+@dataclasses.dataclass
+class Completed:
+    """A retired request: solution + solve metadata + timing."""
+    rid: int
+    tag: Any
+    x: np.ndarray             # solution in the caller's original ordering
+    iterations: int
+    relres: float
+    converged: bool
+    arrival: float
+    started: float
+    finished: float
+    plan_status: str          # "hit" | "refactor" | "miss"
+    slab_width: int
+    slot: int                 # slab column that served this request
+
+    @property
+    def latency(self) -> float:
+        return self.finished - self.arrival
+
+    @property
+    def queue_wait(self) -> float:
+        return self.started - self.arrival
+
+
+class _SlabGroup:
+    """One resident slab: a plan, its device state, and slot bookkeeping.
+
+    All columns of a group share one (plan, values) pair by construction —
+    a slab can never mix incompatible plans or matrices.
+    """
+
+    def __init__(self, key: PlanKey, plan: SolverPlan, values_fp: str,
+                 width: int):
+        self.key = key
+        self.plan = plan
+        self.values_fp = values_fp
+        self.width = width
+        self.state: SlabState = plan.new_slab_state(width)
+        self.slots: list[_Request | None] = [None] * width
+
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    @property
+    def n_occupied(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def pack(self, slot: int, req: _Request) -> None:
+        if req.key != self.key or req.values_fp != self.values_fp:
+            raise AssertionError("attempted to pack a request into a slab "
+                                 "of a different plan/matrix")
+        if self.slots[slot] is not None:
+            raise AssertionError(f"slot {slot} is occupied")
+        col = self.plan.embed_rhs(req.b)
+        self.state = self.state._replace(
+            r=self.state.r.at[:, slot].set(col),
+            fresh=self.state.fresh.at[slot].set(True))
+        self.slots[slot] = req
+
+    def clear(self, slot: int) -> None:
+        # a zero fresh column re-initializes inert (relres 0 < rtol)
+        self.state = self.state._replace(
+            r=self.state.r.at[:, slot].set(0.0),
+            fresh=self.state.fresh.at[slot].set(True))
+        self.slots[slot] = None
+
+
+class SolverService:
+    """Continuous-batching front end over a ``PlanCache``.
+
+    ``submit(a, b)`` enqueues one right-hand side against matrix ``a``;
+    ``step()`` advances the service one scheduling cycle; ``drain()``
+    steps until everything admitted has completed.  See the module
+    docstring for the lifecycle and the numerical contract.
+
+    Scheduling is FIFO *per plan key*: a request that cannot be placed
+    (its group is full, or its matrix values differ from the group's)
+    blocks later requests of the same key — never requests of other keys.
+    A value-change request therefore waits for the group to drain, then
+    takes the ``refactor`` fast path.
+    """
+
+    def __init__(self, cache: PlanCache | None = None, *,
+                 slab_width: int = 8, quantum: int = 16,
+                 rtol: float = 1e-7, maxiter: int = 10_000,
+                 clock=None, record_dispatches: bool = False,
+                 **plan_knobs):
+        if slab_width < 1:
+            raise ValueError(f"slab_width must be >= 1, got {slab_width}")
+        if quantum < 1:
+            raise ValueError(f"quantum must be >= 1, got {quantum}")
+        self.cache = cache if cache is not None else PlanCache()
+        self.slab_width = slab_width
+        self.quantum = quantum
+        self.rtol = rtol
+        self.maxiter = maxiter
+        self.clock = clock if clock is not None else WallClock()
+        self.plan_knobs = dict(plan_knobs)
+        self._np_dtype = np.dtype(jnp.dtype(
+            self.plan_knobs.get("dtype", jnp.float64)))
+        self._next_rid = 0
+        self._queue: list[_Request] = []          # admitted, FIFO
+        self._pending: list[_Request] = []        # future arrivals (virtual)
+        self._groups: "OrderedDict[PlanKey, _SlabGroup]" = OrderedDict()
+        self.completed: dict[int, Completed] = {}
+        self.record_dispatches = record_dispatches
+        self.dispatch_log: list[dict] = []
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, a: sp.spmatrix, b: np.ndarray, *,
+               arrival_time: float | None = None, tag: Any = None) -> int:
+        """Enqueue one RHS; returns a request id.
+
+        ``arrival_time`` (simulated clocks only) defers admission until
+        the virtual clock reaches it — the hook for seeded arrival traces.
+        """
+        b = np.asarray(b)
+        if b.ndim != 1:
+            raise ValueError(
+                f"SolverService.submit takes one RHS of shape (n,), got "
+                f"{b.shape}; the service packs requests into slabs itself "
+                f"— submit columns individually")
+        if b.shape[0] != a.shape[0]:
+            raise ValueError(f"b has shape {b.shape} but a is "
+                             f"{a.shape[0]}x{a.shape[1]}")
+        if (np.issubdtype(b.dtype, np.floating)
+                and b.dtype != self._np_dtype):
+            raise TypeError(
+                f"submit: b has dtype {b.dtype} but the service's plans "
+                f"are {self._np_dtype}; cast b explicitly to opt in")
+        key, a_csr = PlanKey.from_matrix(a, **self.plan_knobs)
+        if arrival_time is None:
+            arrival = self.clock.now()
+        else:
+            if not getattr(self.clock, "simulated", False):
+                raise ValueError(
+                    "arrival_time= requires a simulated clock "
+                    "(VirtualClock); with a wall clock, pace submissions "
+                    "from the caller instead")
+            arrival = float(arrival_time)
+        req = _Request(rid=self._next_rid, key=key,
+                       values_fp=values_fingerprint(a_csr), a=a_csr,
+                       b=np.asarray(b, dtype=self._np_dtype), tag=tag,
+                       arrival=arrival)
+        self._next_rid += 1
+        if arrival_time is None:
+            self._queue.append(req)
+        else:
+            self._pending.append(req)
+            self._pending.sort(key=lambda r: (r.arrival, r.rid))
+        return req.rid
+
+    # -- scheduling ---------------------------------------------------------
+
+    @property
+    def n_in_flight(self) -> int:
+        return sum(g.n_occupied for g in self._groups.values())
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue) + len(self._pending)
+
+    def _admit_due(self) -> None:
+        now = self.clock.now()
+        while self._pending and self._pending[0].arrival <= now:
+            self._queue.append(self._pending.pop(0))
+
+    def _resolve_group(self, req: _Request) -> _SlabGroup | None:
+        """Group able to take ``req`` now, creating one if possible.
+
+        Returns None when the key is blocked this cycle: the live group is
+        full, or holds different matrix values (refactor must wait for it
+        to drain — tearing it down mid-flight would corrupt columns).
+        """
+        group = self._groups.get(req.key)
+        if group is not None:
+            if group.values_fp != req.values_fp:
+                return None
+            return group if group.free_slots() else None
+        plan, status = self.cache.get(req.a, pin=True, **self.plan_knobs)
+        self.clock.charge(status)   # build / refactor / hit cost
+        group = _SlabGroup(req.key, plan, req.values_fp, self.slab_width)
+        group.creation_status = status
+        self._groups[req.key] = group
+        return group
+
+    def _pack_queue(self) -> None:
+        """FIFO pass over the queue; per-key blocking preserves order
+        within a key while other keys keep flowing."""
+        blocked: set[PlanKey] = set()
+        remaining: list[_Request] = []
+        for req in self._queue:
+            if req.key in blocked:
+                remaining.append(req)
+                continue
+            group = self._resolve_group(req)
+            if group is None:
+                blocked.add(req.key)
+                remaining.append(req)
+                continue
+            slot = group.free_slots()[0]
+            req.started = self.clock.now()
+            req.plan_status = getattr(group, "creation_status", "hit")
+            # the group creator reports the cache status; later riders of
+            # the live group are warm by definition
+            group.creation_status = "hit"
+            group.pack(slot, req)
+            req.a = None    # matrix no longer needed; free the reference
+            self.clock.charge("pack")
+            if not group.free_slots():
+                blocked.add(req.key)
+        self._queue = remaining
+
+    def _dispatch_and_retire(self) -> list[Completed]:
+        done: list[Completed] = []
+        for key in list(self._groups):
+            group = self._groups[key]
+            if group.n_occupied == 0:
+                self._teardown(key)
+                continue
+            group.state, steps = group.plan.run_slab(
+                group.state, rtol=self.rtol, maxiter=self.maxiter,
+                quantum=self.quantum)
+            steps = int(steps)
+            self.clock.charge("dispatch")
+            self.clock.charge("iteration", steps)
+            if self.record_dispatches:
+                self.dispatch_log.append({
+                    "key": key, "values_fp": group.values_fp,
+                    "rids": [s.rid if s is not None else None
+                             for s in group.slots],
+                    "steps": steps,
+                })
+            active = np.asarray(group.state.active)
+            iters = np.asarray(group.state.iters)
+            relres = np.asarray(group.state.relres)
+            x_host = None
+            for slot, req in enumerate(group.slots):
+                if req is None or active[slot]:
+                    continue
+                if x_host is None:
+                    x_host = np.asarray(group.state.x)
+                self.clock.charge("retire")
+                rr = float(relres[slot])
+                done.append(Completed(
+                    rid=req.rid, tag=req.tag,
+                    x=group.plan.extract_solution(x_host[:, slot]),
+                    iterations=int(iters[slot]), relres=rr,
+                    converged=rr < self.rtol, arrival=req.arrival,
+                    started=req.started, finished=self.clock.now(),
+                    plan_status=req.plan_status,
+                    slab_width=group.width, slot=slot))
+                group.clear(slot)
+            if group.n_occupied == 0:
+                self._teardown(key)
+        for c in done:
+            self.completed[c.rid] = c
+        return done
+
+    def _teardown(self, key: PlanKey) -> None:
+        del self._groups[key]
+        self.cache.unpin(key)
+
+    def step(self) -> list[Completed]:
+        """One scheduling cycle: admit → pack → dispatch → retire.
+
+        Returns the requests that completed this cycle.  With a virtual
+        clock, an idle service (nothing queued or resident) jumps straight
+        to the next pending arrival instead of spinning.
+        """
+        self._admit_due()
+        if (not self._queue and self.n_in_flight == 0 and self._pending
+                and getattr(self.clock, "simulated", False)):
+            self.clock.advance_to(self._pending[0].arrival)
+            self._admit_due()
+        self._pack_queue()
+        return self._dispatch_and_retire()
+
+    def drain(self, max_steps: int = 100_000) -> list[Completed]:
+        """Step until every admitted and pending request has completed."""
+        done: list[Completed] = []
+        for _ in range(max_steps):
+            if not self._queue and not self._pending \
+                    and self.n_in_flight == 0:
+                return done
+            done.extend(self.step())
+        raise RuntimeError(
+            f"drain did not converge in {max_steps} steps "
+            f"({self.n_queued} queued, {self.n_in_flight} in flight)")
