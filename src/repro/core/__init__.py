@@ -4,13 +4,17 @@ from .coloring import (BMCOrdering, MCOrdering, block_multicolor_ordering,
 from .graph import check_er_condition, invert_perm, ordering_digraph_edges, permute_system
 from .hbmc import (HBMCOrdering, hbmc_from_bmc, hbmc_ordering,
                    pad_system_hbmc, verify_level2_structure)
-from .ic0 import (IC0Structure, ic0, ic0_error, ic0_refactor, ic0_rounds,
-                  ic0_structure, sequential_ic_solve)
-from .iccg import (BatchedPCGResult, PCGResult, SlabState,
-                   make_sharded_spmv, pcg, pcg_batched, pcg_iteration,
-                   spmv_ell, spmv_ell_batched, spmv_sell, spmv_sell_batched)
+from .ic0 import (FactorBreakdownError, IC0Structure, ic0, ic0_error,
+                  ic0_refactor, ic0_rounds, ic0_structure,
+                  sequential_ic_solve)
+from .iccg import (BREAKDOWN, CONVERGED, DIVERGED, DIVERGENCE_FACTOR,
+                   MAXITER, RUNNING, STAGNATED, STAGNATION_WINDOW,
+                   STATUS_NAMES, UNHEALTHY_STATUSES, BatchedPCGResult,
+                   PCGResult, SlabState, make_sharded_spmv, pcg,
+                   pcg_batched, pcg_iteration, spmv_ell, spmv_ell_batched,
+                   spmv_sell, spmv_sell_batched, status_name)
 from .matrices import PAPER_PROBLEMS, PAPER_SHIFTS, paper_problem
-from .plan import SetupBreakdown, SolverPlan, build_plan
+from .plan import ON_BREAKDOWN, SetupBreakdown, SolverPlan, build_plan
 from .sell import (FusedRoundMajorTables, RoundMajorLayout, RoundMajorTables,
                    SellMatrix, StepTables, fuse_round_major, pack_ell,
                    pack_factor, pack_factor_hbmc, pack_sell, pack_steps,

@@ -41,6 +41,20 @@ import scipy.sparse as sp
 from .graph import ragged_arange
 
 
+class FactorBreakdownError(RuntimeError):
+    """The IC(0) factorization broke down (clamped pivots or non-finite
+    factor data) and the caller's ``on_breakdown`` policy forbids using the
+    degraded factor.  Carries ``clamped_pivots`` and the ``shift_schedule``
+    of attempted (shift, clamped_pivots) pairs when raised from the plan's
+    escalation loop."""
+
+    def __init__(self, msg: str, clamped_pivots: int = 0,
+                 shift_schedule: list | None = None):
+        super().__init__(msg)
+        self.clamped_pivots = clamped_pivots
+        self.shift_schedule = shift_schedule or []
+
+
 def ic0(a: sp.spmatrix, shift: float = 0.0, breakdown_eps: float = 1e-13
         ) -> sp.csr_matrix:
     """Return L (CSR, lower triangular incl. diagonal) with A ~= L L^T.
@@ -51,6 +65,13 @@ def ic0(a: sp.spmatrix, shift: float = 0.0, breakdown_eps: float = 1e-13
     the diagonal scaling ``a_ii -> a_ii * (1 + shift)`` before factorizing
     (see the module docstring for the relation to the paper's diagonally
     scaled formulation).
+
+    The returned CSR carries ``clamped_pivots`` — how many diagonal pivots
+    hit the ``breakdown_eps`` guard (a nonzero count means the factor is
+    degraded: A was not positive definite enough for IC(0) at this shift).
+    A NaN pivot is NOT a clamp (NaN comparisons are false; it propagates
+    into the factor data, detectable via ``np.isfinite``) — the
+    round-parallel path behaves identically.
     """
     a = sp.csr_matrix(a).astype(np.float64)
     n = a.shape[0]
@@ -68,6 +89,7 @@ def ic0(a: sp.spmatrix, shift: float = 0.0, breakdown_eps: float = 1e-13
     lcols: list[np.ndarray] = [None] * n  # type: ignore[list-item]
     lvals: list[np.ndarray] = [None] * n  # type: ignore[list-item]
     diag_l = np.empty(n, dtype=np.float64)
+    clamped = 0
 
     for i in range(n):
         s, e = indptr[i], indptr[i + 1]
@@ -102,13 +124,16 @@ def ic0(a: sp.spmatrix, shift: float = 0.0, breakdown_eps: float = 1e-13
             else:  # diagonal
                 if v <= breakdown_eps:
                     v = breakdown_eps  # breakdown guard
+                    clamped += 1
                 row_vals[t] = np.sqrt(v)
                 diag_l[i] = row_vals[t]
         lcols[i] = cols_i
         lvals[i] = row_vals
         data[s:e] = row_vals
 
-    return sp.csr_matrix((data, indices, indptr), shape=(n, n))
+    l = sp.csr_matrix((data, indices, indptr), shape=(n, n))
+    l.clamped_pivots = clamped
+    return l
 
 
 # ---------------------------------------------------------------------------
@@ -282,6 +307,10 @@ def ic0_refactor(st: IC0Structure, a: sp.spmatrix, shift: float = 0.0,
     This is the refactor path of ``SolverPlan``: same sparsity structure,
     new values — no ordering, no symbolic analysis, just the vectorized
     per-step sweep.  Raises ValueError if the pattern differs.
+
+    Like ``ic0``, the returned CSR carries ``clamped_pivots`` (NaN pivots
+    excluded — ``v <= eps`` is false for NaN in both paths, so the
+    sequential and round-parallel counts agree exactly).
     """
     a = sp.csr_matrix(a)
     low = sp.tril(a, format="csr")
@@ -297,6 +326,7 @@ def ic0_refactor(st: IC0Structure, a: sp.spmatrix, shift: float = 0.0,
         data[dpos] = data[dpos] * (1.0 + shift)
 
     diag_l = np.empty(st.n, dtype=np.float64)
+    clamped = 0
     bincount, sqrt, maximum = np.bincount, np.sqrt, np.maximum
     for pos, n_off, dep_off, rows_di, pab, npair, tgt in st.steps:
         v = data[pos]
@@ -306,14 +336,19 @@ def ic0_refactor(st: IC0Structure, a: sp.spmatrix, shift: float = 0.0,
             g = data[pab]
             v = v - bincount(tgt, weights=g[:npair] * g[npair:],
                              minlength=len(pos))
-        # breakdown guard: v <= eps -> eps (maximum is the same map)
-        sq = sqrt(maximum(v[n_off:], breakdown_eps))
+        # breakdown guard: v <= eps -> eps (maximum is the same map; NaN
+        # passes through both — `<=` is false, maximum propagates it)
+        vd = v[n_off:]
+        clamped += int(np.count_nonzero(vd <= breakdown_eps))
+        sq = sqrt(maximum(vd, breakdown_eps))
         data[pos[:n_off]] = v[:n_off] / diag_l[dep_off]
         data[pos[n_off:]] = sq
         diag_l[rows_di] = sq
 
-    return sp.csr_matrix((data, st.indices.copy(), st.indptr.copy()),
-                         shape=(st.n, st.n))
+    l = sp.csr_matrix((data, st.indices.copy(), st.indptr.copy()),
+                      shape=(st.n, st.n))
+    l.clamped_pivots = clamped
+    return l
 
 
 def ic0_rounds(a: sp.spmatrix, rounds: list[np.ndarray], shift: float = 0.0,

@@ -22,6 +22,52 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 
+# ---------------------------------------------------------------------------
+# Solve-status taxonomy.
+#
+# Every PCG front end (single-RHS, batched, slab) reports how it terminated
+# as one of these codes instead of a bare converged bool.  Small ints so the
+# codes live inside the jitted loops (int32 state) and cross the host
+# boundary cheaply; ``STATUS_NAMES`` maps code -> name for reports.
+#
+#   RUNNING    — still iterating (only ever visible mid-slab, between
+#                dispatch quanta; never a final status of pcg/pcg_batched)
+#   CONVERGED  — relative residual dropped below rtol
+#   MAXITER    — iteration budget exhausted with a finite, healthy state
+#   BREAKDOWN  — non-positive curvature (p^T A p <= 0: the matrix is not
+#                SPD on this Krylov space) or a non-finite residual /
+#                pairing (NaN/Inf input, overflow, poisoned factor); the
+#                reported iterate is the last *finite* one
+#   DIVERGED   — relres grew past ``divergence_factor`` times its best
+#   STAGNATED  — no new best relres for ``stagnation_window`` iterations
+#
+# Detection is select-based (``jnp.where``): on healthy inputs every guard
+# selects the identical update the unguarded loop computed, so the float
+# sequences — and therefore all parity/iteration-count pins — are
+# bitwise-unchanged.
+# ---------------------------------------------------------------------------
+
+RUNNING, CONVERGED, MAXITER, BREAKDOWN, DIVERGED, STAGNATED = range(6)
+STATUS_NAMES = ("RUNNING", "CONVERGED", "MAXITER", "BREAKDOWN", "DIVERGED",
+                "STAGNATED")
+#: statuses that mean "stop — more iterations cannot help" (the serving
+#: layer quarantines slab columns that reach one of these)
+UNHEALTHY_STATUSES = ("BREAKDOWN", "DIVERGED", "STAGNATED")
+
+#: default divergence band: relres > factor * best-so-far trips DIVERGED.
+#: PCG residuals oscillate, so the band is wide; healthy solves never
+#: wander eight orders of magnitude above their best.
+DIVERGENCE_FACTOR = 1e8
+#: default stagnation window: iterations without a new best relres before
+#: STAGNATED trips.  Healthy ICCG improves its best every few iterations.
+STAGNATION_WINDOW = 1000
+
+
+def status_name(code) -> str:
+    """Human-readable name of a solve-status code."""
+    return STATUS_NAMES[int(code)]
+
+
 def spmv_ell(vals: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
     """(n, K) row-major ELL SpMV: y_i = sum_k vals[i,k] * x[cols[i,k]]."""
     return jnp.einsum("rk,rk->r", vals, x[cols])
@@ -156,6 +202,9 @@ class PCGResult:
     relres: float
     converged: bool
     history: np.ndarray   # relative residual norm per iteration (padded NaN)
+    # how the solve terminated — one of STATUS_NAMES[1:] (see the taxonomy
+    # at the top of this module); ``converged`` stays as the legacy bool
+    status: str = "CONVERGED"
 
 
 def _pcg_device(spmv: Callable[[jax.Array], jax.Array],
@@ -163,14 +212,28 @@ def _pcg_device(spmv: Callable[[jax.Array], jax.Array],
                 b: jax.Array,
                 rtol: float = 1e-7,
                 maxiter: int = 10_000,
-                record_history: bool = False):
+                record_history: bool = False,
+                divergence_factor: float | None = DIVERGENCE_FACTOR,
+                stagnation_window: int | None = STAGNATION_WINDOW):
     """Device core of ``pcg``: pure jax in / jax out, jittable.
 
-    ``rtol``/``maxiter``/``record_history`` are Python values (static under
-    jit).  Returns ``(x, iterations, relres, history)`` as jax arrays;
-    ``SolverPlan`` wraps this in a cached ``jax.jit`` so warm solves skip
-    retracing entirely.
+    ``rtol``/``maxiter``/``record_history`` and the monitoring knobs are
+    Python values (static under jit).  Returns ``(x, iterations, relres,
+    status, history)`` as jax arrays; ``SolverPlan`` wraps this in a cached
+    ``jax.jit`` so warm solves skip retracing entirely.
+
+    Health monitoring runs inside the loop: a non-SPD pairing
+    (``p^T A p <= 0``) or a non-finite residual/pairing stops the loop with
+    ``BREAKDOWN`` *before* the poisoned update replaces the last finite
+    iterate; ``relres`` growing past ``divergence_factor * best`` stops
+    with ``DIVERGED``; ``stagnation_window`` iterations without a new best
+    stop with ``STAGNATED``.  All guards are selects, so the healthy-path
+    float sequence is bitwise-identical to the unguarded loop.
     """
+    if divergence_factor is None:
+        divergence_factor = float("inf")
+    if stagnation_window is None:
+        stagnation_window = maxiter + 1
     b = jnp.asarray(b)
     bnorm = jnp.linalg.norm(b)
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
@@ -183,34 +246,73 @@ def _pcg_device(spmv: Callable[[jax.Array], jax.Array],
     # carry ||r|| in the loop state: one full-vector reduction per step
     # (cond reads the carried value instead of recomputing the norm)
     rnorm0 = jnp.linalg.norm(r0)
+    relres0 = rnorm0 / bnorm
+    # a non-finite initial state (NaN/Inf in b, or a preconditioner that
+    # produced one) is a breakdown before the first iteration
+    init_ok = jnp.isfinite(relres0) & jnp.isfinite(rz0)
+    status0 = jnp.where(init_ok, RUNNING, BREAKDOWN).astype(jnp.int32)
     hist0 = (jnp.full((maxiter + 1,), jnp.nan, dtype=b.dtype)
              if record_history else jnp.zeros((0,), dtype=b.dtype))
     if record_history:
-        hist0 = hist0.at[0].set(rnorm0 / bnorm)
+        hist0 = hist0.at[0].set(relres0)
 
     def cond(state):
-        _, _, _, _, rnorm, it, _ = state
-        return (rnorm / bnorm >= rtol) & (it < maxiter)
+        _, _, _, _, _, rnorm, it, status, _, _, _ = state
+        return ((rnorm / bnorm >= rtol) & (it < maxiter)
+                & (status == RUNNING))
 
     def body(state):
-        x, r, p, rz, _, it, hist = state
+        x, _, r, p, rz, rnorm, it, status, best, since_best, hist = state
         ap = spmv(p)
-        alpha = rz / jnp.vdot(p, ap)
-        x = x + alpha * p
-        r = r - alpha * ap
-        z = precond(r)
-        rz_new = jnp.vdot(r, z)
-        beta = rz_new / rz
-        p = z + beta * p
-        it = it + 1
-        rnorm = jnp.linalg.norm(r)
+        pap = jnp.vdot(p, ap)
+        alpha = rz / pap
+        x2 = x + alpha * p
+        r2 = r - alpha * ap
+        z = precond(r2)
+        rz2 = jnp.vdot(r2, z)
+        beta = rz2 / rz
+        p2 = z + beta * p
+        rnorm2 = jnp.linalg.norm(r2)
+        relres2 = rnorm2 / bnorm
+        # pap > 0 is False for NaN pap too; a step that still produced a
+        # non-finite residual/pairing (overflow) is equally a breakdown.
+        # Broken steps are DISCARDED: a broken step makes cond False
+        # immediately (status leaves RUNNING) and the loop outputs read
+        # the carried scalars, never the poisoned r or p — so no vector
+        # select runs inside the loop at all.  The previous iterate rides
+        # along as x_prev (pure buffer rotation, no copy) and the single
+        # rollback select happens once, after the loop.
+        ok = (pap > 0) & jnp.isfinite(rnorm2) & jnp.isfinite(rz2)
+        rz = jnp.where(ok, rz2, rz)
+        rnorm = jnp.where(ok, rnorm2, rnorm)
+        it = jnp.where(ok, it + 1, it)
+        improved = relres2 < best
+        diverged = ok & (relres2 > divergence_factor * best)
+        since_best = jnp.where(ok, jnp.where(improved, 0, since_best + 1),
+                               since_best)
+        stagnated = ok & (since_best >= stagnation_window)
+        best = jnp.where(ok, jnp.minimum(best, relres2), best)
+        status = jnp.where(~ok, BREAKDOWN,
+                           jnp.where(diverged, DIVERGED,
+                                     jnp.where(stagnated, STAGNATED,
+                                               status))).astype(jnp.int32)
         if record_history:
-            hist = hist.at[it].set(rnorm / bnorm)
-        return (x, r, p, rz_new, rnorm, it, hist)
+            hist = jnp.where(ok, hist.at[it].set(relres2), hist)
+        return (x2, x, r2, p2, rz, rnorm, it, status, best, since_best,
+                hist)
 
-    state = (x0, r0, p0, rz0, rnorm0, jnp.asarray(0), hist0)
-    x, r, _, _, rnorm, it, hist = jax.lax.while_loop(cond, body, state)
-    return x, it, rnorm / bnorm, hist
+    state = (x0, x0, r0, p0, rz0, rnorm0, jnp.asarray(0), status0, relres0,
+             jnp.asarray(0, dtype=jnp.int32), hist0)
+    (x, x_prev, _, _, _, rnorm, it, status, _, _, hist) = jax.lax.while_loop(
+        cond, body, state)
+    # a BREAKDOWN exit left the poisoned update in x; report the last
+    # finite iterate instead (healthy exits select x — identical bits)
+    x = jnp.where(status == BREAKDOWN, x_prev, x)
+    relres = rnorm / bnorm
+    status = jnp.where(status == RUNNING,
+                       jnp.where(relres < rtol, CONVERGED, MAXITER),
+                       status).astype(jnp.int32)
+    return x, it, relres, status, hist
 
 
 def pcg(spmv: Callable[[jax.Array], jax.Array],
@@ -218,14 +320,26 @@ def pcg(spmv: Callable[[jax.Array], jax.Array],
         b: jax.Array,
         rtol: float = 1e-7,
         maxiter: int = 10_000,
-        record_history: bool = False) -> PCGResult:
-    """Standard PCG; runs fully on device, one while_loop iteration per CG step."""
-    x, it, relres, hist = _pcg_device(spmv, precond, b, rtol=rtol,
-                                      maxiter=maxiter,
-                                      record_history=record_history)
+        record_history: bool = False,
+        divergence_factor: float | None = DIVERGENCE_FACTOR,
+        stagnation_window: int | None = STAGNATION_WINDOW) -> PCGResult:
+    """Standard PCG; runs fully on device, one while_loop iteration per CG step.
+
+    Terminates with a definite ``result.status`` on every input: healthy
+    systems report ``CONVERGED``/``MAXITER`` exactly as before (bitwise —
+    the monitoring is select-based), a zero RHS converges immediately with
+    ``x = 0``, and NaN/Inf inputs, non-SPD pairings, divergence, and
+    stagnation stop early instead of silently iterating on garbage (the
+    reported ``x`` is the last finite iterate).
+    """
+    x, it, relres, status, hist = _pcg_device(
+        spmv, precond, b, rtol=rtol, maxiter=maxiter,
+        record_history=record_history, divergence_factor=divergence_factor,
+        stagnation_window=stagnation_window)
     relres = float(relres)
     return PCGResult(x=np.asarray(x), iterations=int(it), relres=relres,
-                     converged=relres < rtol, history=np.asarray(hist))
+                     converged=relres < rtol, history=np.asarray(hist),
+                     status=STATUS_NAMES[int(status)])
 
 
 # ---------------------------------------------------------------------------
@@ -244,6 +358,14 @@ class BatchedPCGResult:
     # column); empty when record_history=False
     history: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros((0, 0)))
+    # (B,) per-column termination codes (indices into STATUS_NAMES)
+    status: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), dtype=np.int32))
+
+    @property
+    def status_names(self) -> list[str]:
+        """Per-column status names (``STATUS_NAMES[code]`` per column)."""
+        return [STATUS_NAMES[int(s)] for s in self.status]
 
 
 def _pcg_batched_device(spmv: Callable[[jax.Array], jax.Array],
@@ -251,8 +373,24 @@ def _pcg_batched_device(spmv: Callable[[jax.Array], jax.Array],
                         b: jax.Array,
                         rtol: float = 1e-7,
                         maxiter: int = 10_000,
-                        record_history: bool = False):
-    """Device core of ``pcg_batched``; returns jax arrays, jittable."""
+                        record_history: bool = False,
+                        divergence_factor: float | None = DIVERGENCE_FACTOR,
+                        stagnation_window: int | None = STAGNATION_WINDOW):
+    """Device core of ``pcg_batched``; returns jax arrays, jittable.
+
+    Per-column health monitoring mirrors ``_pcg_device``: a column whose
+    pairing goes non-positive is frozen BEFORE the division poisons it
+    (``alpha = 0``, exactly how converged columns freeze), a column whose
+    update still produced a non-finite residual rolls back to its last
+    finite iterate, and divergence/stagnation trip per column.  A broken
+    column deactivates with an explicit terminal status — never the old
+    silent NaN-comparison fallout — while its healthy slab neighbours'
+    float sequences stay bitwise-untouched (all guards are selects).
+    """
+    if divergence_factor is None:
+        divergence_factor = float("inf")
+    if stagnation_window is None:
+        stagnation_window = maxiter + 1
     b = jnp.asarray(b)
     if b.ndim == 1:
         raise ValueError(
@@ -275,46 +413,84 @@ def _pcg_batched_device(spmv: Callable[[jax.Array], jax.Array],
     p0 = z0
     rz0 = jnp.einsum("nb,nb->b", r0, z0)
     relres0 = relres_of(r0)
-    active0 = relres0 >= rtol
+    # non-finite init (NaN/Inf b, poisoned factor): BREAKDOWN before the
+    # first step.  NaN relres already failed `>= rtol`; the explicit
+    # finiteness mask also catches Inf relres (which would pass) and pins
+    # the deactivation to a status instead of a comparison accident.
+    finite0 = jnp.isfinite(relres0) & jnp.isfinite(rz0)
+    active0 = (relres0 >= rtol) & finite0
+    status0 = jnp.where(finite0,
+                        jnp.where(relres0 < rtol, CONVERGED, RUNNING),
+                        BREAKDOWN).astype(jnp.int32)
     iters0 = jnp.zeros(nb, dtype=jnp.int32)
+    since0 = jnp.zeros(nb, dtype=jnp.int32)
     hist0 = (jnp.full((maxiter + 1, nb), jnp.nan, dtype=b.dtype)
              if record_history else jnp.zeros((0, nb), dtype=b.dtype))
     if record_history:
         hist0 = hist0.at[0].set(relres0)
 
     def cond(state):
-        _, _, _, _, active, _, step, _ = state
+        _, _, _, _, active, _, step, _, _, _, _ = state
         return jnp.any(active) & (step < maxiter)
 
     def body(state):
-        x, r, p, rz, active, iters, step, hist = state
+        x, r, p, rz, active, iters, step, status, best, since, hist = state
         ap = spmv(p)
         pap = jnp.einsum("nb,nb->b", p, ap)
-        alpha = jnp.where(active, rz / pap, 0.0)
-        x = x + alpha[None, :] * p
-        r = r - alpha[None, :] * ap
-        z = precond(r)
-        rz_new = jnp.einsum("nb,nb->b", r, z)
-        beta = jnp.where(active, rz_new / rz, 0.0)
-        p = jnp.where(active[None, :], z + beta[None, :] * p, p)
-        rz = jnp.where(active, rz_new, rz)
-        iters = iters + active.astype(jnp.int32)
-        relres = relres_of(r)
+        # non-positive / non-finite curvature freezes the column BEFORE
+        # the rz/pap division (alpha = 0, exactly how a converged column
+        # freezes); for healthy columns `upd` equals `active` bitwise
+        upd = active & (pap > 0)
+        alpha = jnp.where(upd, rz / pap, 0.0)
+        x2 = x + alpha[None, :] * p
+        r2 = r - alpha[None, :] * ap
+        z = precond(r2)
+        rz2 = jnp.einsum("nb,nb->b", r2, z)
+        beta = jnp.where(upd, rz2 / rz, 0.0)
+        p2 = jnp.where(upd[None, :], z + beta[None, :] * p, p)
+        relres2 = relres_of(r2)
+        # a column whose update still produced a non-finite residual /
+        # pairing (overflow) rolls back to its last finite iterate
+        ok = upd & jnp.isfinite(relres2) & jnp.isfinite(rz2)
+        broke = active & ~ok
+        x = jnp.where(ok[None, :], x2, x)
+        r = jnp.where(ok[None, :], r2, r)
+        p = jnp.where(ok[None, :], p2, p)
+        rz = jnp.where(ok, rz2, rz)
+        iters = iters + ok.astype(jnp.int32)
         if record_history:
             # a column records its residual at row == its own iteration
-            # count while active; frozen columns keep their NaN padding,
-            # matching the single-RHS history shape one for one (the lane
-            # index dtype must match `iters` — mixed i64/i32 scatter
-            # indices are a FutureWarning on the way to a hard error)
+            # count while healthy-active; frozen columns keep their NaN
+            # padding, matching the single-RHS history shape one for one
+            # (the lane index dtype must match `iters` — mixed i64/i32
+            # scatter indices are a FutureWarning on the way to an error)
             lanes = jnp.arange(nb, dtype=iters.dtype)
             hist = hist.at[iters, lanes].set(
-                jnp.where(active, relres, hist[iters, lanes]))
-        active = active & (relres >= rtol)
-        return (x, r, p, rz, active, iters, step + 1, hist)
+                jnp.where(ok, relres2, hist[iters, lanes]))
+        improved = relres2 < best
+        diverged = ok & (relres2 > divergence_factor * best)
+        since = jnp.where(ok, jnp.where(improved, 0, since + 1), since)
+        stagnated = ok & (since >= stagnation_window) & ~diverged
+        best = jnp.where(ok, jnp.minimum(best, relres2), best)
+        status = jnp.where(broke, BREAKDOWN,
+                           jnp.where(diverged, DIVERGED,
+                                     jnp.where(stagnated, STAGNATED,
+                                               status))).astype(jnp.int32)
+        active = ok & (relres2 >= rtol) & ~diverged & ~stagnated
+        return (x, r, p, rz, active, iters, step + 1, status, best, since,
+                hist)
 
-    state = (x0, r0, p0, rz0, active0, iters0, jnp.asarray(0), hist0)
-    x, r, _, _, _, iters, step, hist = jax.lax.while_loop(cond, body, state)
-    return x, iters, relres_of(r), step, hist
+    state = (x0, r0, p0, rz0, active0, iters0, jnp.asarray(0), status0,
+             relres0, since0, hist0)
+    (x, r, _, _, _, iters, step, status, _, _, hist) = jax.lax.while_loop(
+        cond, body, state)
+    relres = relres_of(r)
+    # columns still RUNNING terminated healthily: converged or out of
+    # budget (terminal codes set inside the loop are kept)
+    status = jnp.where(status == RUNNING,
+                       jnp.where(relres < rtol, CONVERGED, MAXITER),
+                       status).astype(jnp.int32)
+    return x, iters, relres, step, status, hist
 
 
 def pcg_batched(spmv: Callable[[jax.Array], jax.Array],
@@ -322,7 +498,10 @@ def pcg_batched(spmv: Callable[[jax.Array], jax.Array],
                 b: jax.Array,
                 rtol: float = 1e-7,
                 maxiter: int = 10_000,
-                record_history: bool = False) -> BatchedPCGResult:
+                record_history: bool = False,
+                divergence_factor: float | None = DIVERGENCE_FACTOR,
+                stagnation_window: int | None = STAGNATION_WINDOW
+                ) -> BatchedPCGResult:
     """PCG over B right-hand sides in ONE device while_loop.
 
     ``spmv`` and ``precond`` map (n, B) -> (n, B) column-wise (e.g.
@@ -347,14 +526,25 @@ def pcg_batched(spmv: Callable[[jax.Array], jax.Array],
     wall-clock is max(iterations) rounds, with the S sequential trisolve
     rounds amortized over all live columns — the multi-RHS workload the
     round-major kernel was built for.
+
+    Per-column termination is reported in ``result.status`` (codes into
+    ``STATUS_NAMES``; names via ``result.status_names``): a column whose
+    residual goes NaN — or that hits non-positive curvature, divergence,
+    or stagnation — deactivates with an explicit ``BREAKDOWN`` /
+    ``DIVERGED`` / ``STAGNATED`` code instead of silently falling out of
+    the active mask mid-garbage, and its healthy neighbours are bitwise
+    unaffected.
     """
-    x, iters, relres, step, hist = _pcg_batched_device(
+    x, iters, relres, step, status, hist = _pcg_batched_device(
         spmv, precond, b, rtol=rtol, maxiter=maxiter,
-        record_history=record_history)
+        record_history=record_history,
+        divergence_factor=divergence_factor,
+        stagnation_window=stagnation_window)
     relres = np.asarray(relres)
     return BatchedPCGResult(x=np.asarray(x), iterations=np.asarray(iters),
                             relres=relres, converged=relres < rtol,
-                            n_steps=int(step), history=np.asarray(hist))
+                            n_steps=int(step), history=np.asarray(hist),
+                            status=np.asarray(status))
 
 
 # ---------------------------------------------------------------------------
@@ -379,6 +569,16 @@ class SlabState(NamedTuple):
     slot — zero residual initializes to ``relres = 0 < rtol``, i.e. inert).
     All other per-column entries of a fresh column are ignored and
     overwritten at dispatch entry.
+
+    ``status[j]`` carries the per-column termination code (index into
+    ``STATUS_NAMES``): ``RUNNING`` while iterating, resolved at the
+    dispatch where the column deactivates.  An inactive column's status is
+    always definite — the serving layer retires on it (and quarantines
+    ``BREAKDOWN``/``DIVERGED``/``STAGNATED`` columns immediately instead
+    of letting them hold a slot for their full ``maxiter`` budget).
+    ``best``/``since_best`` are the divergence/stagnation monitor carry
+    (best relres so far, iterations since it improved) — slab-resident so
+    the monitoring is seamless across dispatch boundaries.
     """
     x: jax.Array        # (m, B) iterates
     r: jax.Array        # (m, B) residuals (RHS for fresh columns)
@@ -389,6 +589,9 @@ class SlabState(NamedTuple):
     iters: jax.Array    # (B,)   per-column iteration counts (int32)
     relres: jax.Array   # (B,)   last relative residual norms
     fresh: jax.Array    # (B,)   initialize at next dispatch entry
+    status: jax.Array   # (B,)   per-column termination codes (int32)
+    best: jax.Array     # (B,)   best relres so far (monitor carry)
+    since_best: jax.Array  # (B,) iterations since best improved (int32)
 
 
 def _pcg_slab_device(spmv: Callable[[jax.Array], jax.Array],
@@ -396,20 +599,31 @@ def _pcg_slab_device(spmv: Callable[[jax.Array], jax.Array],
                      state: SlabState,
                      rtol: float = 1e-7,
                      maxiter: int = 10_000,
-                     quantum: int = 16):
+                     quantum: int = 16,
+                     divergence_factor: float | None = DIVERGENCE_FACTOR,
+                     stagnation_window: int | None = STAGNATION_WINDOW):
     """Advance a PCG slab by at most ``quantum`` iterations; jittable.
 
     Entry initialization applies only to columns with ``fresh`` set (their
     ``r`` holds the embedded RHS): exactly the ``_pcg_batched_device`` init
-    per column.  The loop body performs the identical arithmetic sequence
-    as ``_pcg_batched_device`` — converged/inert columns are frozen by
-    ``alpha = beta = 0`` — with one addition: a per-column
+    per column — including its health screen (a non-finite fresh RHS is
+    ``BREAKDOWN`` on entry, a zero RHS is ``CONVERGED``/inert).  The loop
+    body performs the identical arithmetic sequence as
+    ``_pcg_batched_device`` — converged/inert/broken columns are frozen by
+    ``alpha = beta = 0``, breakdown/divergence/stagnation deactivate a
+    column with its terminal status — with one addition: a per-column
     ``iters < maxiter`` cutoff (columns enter the slab at different times,
     so the global step counter cannot bound them).  Returns
-    ``(SlabState, steps)`` with ``fresh`` cleared and ``steps`` the number
-    of while_loop trips taken this dispatch.
+    ``(SlabState, steps)`` with ``fresh`` cleared, every inactive column's
+    ``status`` definite, and ``steps`` the number of while_loop trips
+    taken this dispatch.
     """
-    x, r, p, rz, bnorm, active, iters, relres, fresh = state
+    if divergence_factor is None:
+        divergence_factor = float("inf")
+    if stagnation_window is None:
+        stagnation_window = maxiter + 1
+    (x, r, p, rz, bnorm, active, iters, relres, fresh, status, best,
+     since_best) = state
 
     # per-column init for fresh columns; continuing columns pass through
     # every `where` bitwise-untouched (the precond/einsum results for them
@@ -419,42 +633,81 @@ def _pcg_slab_device(spmv: Callable[[jax.Array], jax.Array],
     nrm0 = jnp.linalg.norm(r, axis=0)
     bnorm0 = jnp.where(nrm0 == 0, 1.0, nrm0)
     relres0 = nrm0 / bnorm0
+    finite0 = jnp.isfinite(relres0) & jnp.isfinite(rz0)
     x = jnp.where(fresh[None, :], jnp.zeros_like(x), x)
     p = jnp.where(fresh[None, :], z, p)
     rz = jnp.where(fresh, rz0, rz)
     bnorm = jnp.where(fresh, bnorm0, bnorm)
     iters = jnp.where(fresh, 0, iters)
     relres = jnp.where(fresh, relres0, relres)
-    active = jnp.where(fresh, relres0 >= rtol, active)
+    active = jnp.where(fresh, (relres0 >= rtol) & finite0, active)
+    status = jnp.where(fresh,
+                       jnp.where(finite0,
+                                 jnp.where(relres0 < rtol, CONVERGED,
+                                           RUNNING),
+                                 BREAKDOWN),
+                       status).astype(jnp.int32)
+    best = jnp.where(fresh, relres0, best)
+    since_best = jnp.where(fresh, 0, since_best).astype(jnp.int32)
 
     def relres_of(rr):
         return jnp.linalg.norm(rr, axis=0) / bnorm
 
     def cond(carry):
-        _, _, _, _, active_, _, _, step = carry
+        _, _, _, _, active_, _, _, _, _, _, step = carry
         return jnp.any(active_) & (step < quantum)
 
     def body(carry):
-        x, r, p, rz, active, iters, _, step = carry
+        x, r, p, rz, active, iters, relres, status, best, since, step = \
+            carry
         ap = spmv(p)
         pap = jnp.einsum("nb,nb->b", p, ap)
-        alpha = jnp.where(active, rz / pap, 0.0)
-        x = x + alpha[None, :] * p
-        r = r - alpha[None, :] * ap
-        z = precond(r)
-        rz_new = jnp.einsum("nb,nb->b", r, z)
-        beta = jnp.where(active, rz_new / rz, 0.0)
-        p = jnp.where(active[None, :], z + beta[None, :] * p, p)
-        rz = jnp.where(active, rz_new, rz)
-        iters = iters + active.astype(jnp.int32)
-        relres = relres_of(r)
-        active = active & (relres >= rtol) & (iters < maxiter)
-        return (x, r, p, rz, active, iters, relres, step + 1)
+        # same per-column guards as _pcg_batched_device: freeze before a
+        # bad division, roll back a non-finite update, monitor
+        # divergence/stagnation — healthy columns select identical floats
+        upd = active & (pap > 0)
+        alpha = jnp.where(upd, rz / pap, 0.0)
+        x2 = x + alpha[None, :] * p
+        r2 = r - alpha[None, :] * ap
+        z = precond(r2)
+        rz2 = jnp.einsum("nb,nb->b", r2, z)
+        beta = jnp.where(upd, rz2 / rz, 0.0)
+        p2 = jnp.where(upd[None, :], z + beta[None, :] * p, p)
+        relres2 = relres_of(r2)
+        ok = upd & jnp.isfinite(relres2) & jnp.isfinite(rz2)
+        broke = active & ~ok
+        x = jnp.where(ok[None, :], x2, x)
+        r = jnp.where(ok[None, :], r2, r)
+        p = jnp.where(ok[None, :], p2, p)
+        rz = jnp.where(ok, rz2, rz)
+        iters = iters + ok.astype(jnp.int32)
+        relres = jnp.where(ok, relres2, relres)
+        improved = relres2 < best
+        diverged = ok & (relres2 > divergence_factor * best)
+        since = jnp.where(ok, jnp.where(improved, 0, since + 1), since)
+        stagnated = ok & (since >= stagnation_window) & ~diverged
+        best = jnp.where(ok, jnp.minimum(best, relres2), best)
+        status = jnp.where(broke, BREAKDOWN,
+                           jnp.where(diverged, DIVERGED,
+                                     jnp.where(stagnated, STAGNATED,
+                                               status))).astype(jnp.int32)
+        active = (ok & (relres2 >= rtol) & (iters < maxiter)
+                  & ~diverged & ~stagnated)
+        return (x, r, p, rz, active, iters, relres, status, best, since,
+                step + 1)
 
-    carry = (x, r, p, rz, active, iters, relres, jnp.asarray(0))
-    x, r, p, rz, active, iters, relres, step = jax.lax.while_loop(
-        cond, body, carry)
+    carry = (x, r, p, rz, active, iters, relres, status, best, since_best,
+             jnp.asarray(0))
+    (x, r, p, rz, active, iters, relres, status, best, since_best,
+     step) = jax.lax.while_loop(cond, body, carry)
+    # every inactive column leaves the dispatch with a definite status:
+    # terminal codes set in the loop are kept; an inactive RUNNING column
+    # terminated healthily (converged, or out of per-column budget)
+    status = jnp.where(active | (status != RUNNING), status,
+                       jnp.where(relres < rtol, CONVERGED,
+                                 MAXITER)).astype(jnp.int32)
     out = SlabState(x=x, r=r, p=p, rz=rz, bnorm=bnorm, active=active,
                     iters=iters, relres=relres,
-                    fresh=jnp.zeros_like(fresh))
+                    fresh=jnp.zeros_like(fresh), status=status, best=best,
+                    since_best=since_best)
     return out, step

@@ -39,11 +39,12 @@ from . import sell
 from .coloring import block_multicolor_ordering, multicolor_ordering, pad_system
 from .graph import permute_system
 from .hbmc import hbmc_from_bmc, pad_system_hbmc
-from .ic0 import ic0_refactor, ic0_structure
-from .iccg import (BatchedPCGResult, PCGResult, SlabState,
+from .ic0 import FactorBreakdownError, ic0_refactor, ic0_structure
+from .iccg import (DIVERGENCE_FACTOR, STAGNATION_WINDOW, STATUS_NAMES,
+                   BatchedPCGResult, PCGResult, SlabState,
                    _pcg_batched_device, _pcg_device, _pcg_slab_device,
                    make_sharded_spmv, spmv_ell, spmv_ell_batched, spmv_sell,
-                   spmv_sell_batched)
+                   spmv_sell_batched, status_name)
 from .trisolve import (BACKENDS, LAYOUTS, DistributedRoundMajorPreconditioner,
                        HBMCPreconditioner, RoundMajorPreconditioner,
                        build_preconditioner_from_rounds,
@@ -212,6 +213,15 @@ def _build_preconditioner(l_bar, sysd: _System, dtype, backend: str,
         dtype=dtype, backend=backend, interpret=interpret), None
 
 
+# Manteuffel-style shift escalation (on_breakdown="escalate"): retry the
+# numeric sweep with shift + extra, doubling `extra` from _ESCALATION_START,
+# until the factor is clean (zero clamped pivots, all-finite data) or the
+# attempt budget runs out.
+_ESCALATION_START = 1e-3
+_MAX_ESCALATIONS = 16
+ON_BREAKDOWN = ("clamp", "raise", "escalate")
+
+
 def _occupancy_from_rounds(rounds, drop) -> float:
     if drop is not None:
         rounds = [r[~drop[r]] for r in rounds]
@@ -240,7 +250,10 @@ class SolverPlan:
                  backend: str = "xla", interpret: bool | None = None,
                  layout: str = "round_major", mesh: Mesh | None = None,
                  mesh_axis: str = "data", lane_multiple: int = 1,
-                 spmv_backend: str = "xla"):
+                 spmv_backend: str = "xla", on_breakdown: str = "clamp"):
+        if on_breakdown not in ON_BREAKDOWN:
+            raise ValueError(f"unknown on_breakdown {on_breakdown!r}; "
+                             f"expected one of {ON_BREAKDOWN}")
         if layout not in LAYOUTS:
             raise ValueError(f"unknown layout {layout!r}; expected one of "
                              f"{LAYOUTS}")
@@ -275,6 +288,11 @@ class SolverPlan:
         self.block_size = block_size
         self.w = w
         self.shift = shift
+        self.on_breakdown = on_breakdown
+        # factor-health record, refreshed by every _factor pass
+        self.effective_shift = shift
+        self.clamped_pivots = 0
+        self.shift_schedule: list[tuple[float, int]] = []
         self.spmv_format = spmv_format
         self.spmv_backend = spmv_backend
         self.dtype = dtype
@@ -302,7 +320,7 @@ class SolverPlan:
         t1 = time.perf_counter()
         self._structure = ic0_structure(self._sysd.a_bar,
                                         self._sysd.fwd_rounds)
-        l_bar = ic0_refactor(self._structure, self._sysd.a_bar, shift=shift)
+        l_bar = self._factor(self._sysd.a_bar)
         t2 = time.perf_counter()
         self._build_operators(l_bar)
         t3 = time.perf_counter()
@@ -380,6 +398,61 @@ class SolverPlan:
         if not self._operands_as_args:
             self._pcg_cache.clear()   # closed-over operands -> retrace
 
+    def _factor(self, a_bar: sp.csr_matrix) -> sp.csr_matrix:
+        """Numeric IC(0) sweep under the plan's ``on_breakdown`` policy.
+
+        A factor is *clean* when no diagonal pivot hit the breakdown guard
+        and every entry is finite.  Policies on a dirty factor:
+
+          * ``"clamp"`` (default) — keep the eps-clamped factor, exactly
+            the pre-policy behavior (bitwise; the paper's semi-definite
+            experiments rely on it), but record ``clamped_pivots``.
+          * ``"raise"`` — raise :class:`FactorBreakdownError` immediately.
+          * ``"escalate"`` — retry with ``shift + extra`` for doubling
+            ``extra`` (Manteuffel-style diagonal shifting) until clean;
+            raise FactorBreakdownError if the attempt budget runs out or
+            the matrix itself is non-finite (no shift repairs NaN data).
+
+        Every attempt is appended to ``self.shift_schedule`` as
+        ``(shift, clamped_pivots)``; ``self.effective_shift`` is the shift
+        of the factor actually in use and ``self.clamped_pivots`` its
+        clamp count.
+        """
+        if not np.isfinite(a_bar.data).all():
+            raise FactorBreakdownError(
+                "matrix values are not finite; no diagonal shift can "
+                "repair a NaN/Inf operand", shift_schedule=[])
+        l_bar = ic0_refactor(self._structure, a_bar, shift=self.shift)
+        clamped = int(getattr(l_bar, "clamped_pivots", 0))
+        schedule = [(float(self.shift), clamped)]
+        self.shift_schedule = schedule
+        if clamped == 0 or self.on_breakdown == "clamp":
+            self.effective_shift = self.shift
+            self.clamped_pivots = clamped
+            return l_bar
+        if self.on_breakdown == "raise":
+            raise FactorBreakdownError(
+                f"IC(0) breakdown: {clamped} pivot(s) clamped at shift="
+                f"{self.shift} (on_breakdown='raise'); retry with a larger "
+                f"shift or on_breakdown='escalate'",
+                clamped_pivots=clamped, shift_schedule=schedule)
+        extra = _ESCALATION_START
+        for _ in range(_MAX_ESCALATIONS):
+            trial = float(self.shift) + extra
+            l_bar = ic0_refactor(self._structure, a_bar, shift=trial)
+            clamped = int(getattr(l_bar, "clamped_pivots", 0))
+            schedule.append((trial, clamped))
+            if clamped == 0:
+                self.effective_shift = trial
+                self.clamped_pivots = 0
+                return l_bar
+            extra *= 2.0
+        raise FactorBreakdownError(
+            f"IC(0) breakdown persists after {_MAX_ESCALATIONS} shift "
+            f"escalations (last shift {schedule[-1][0]}, "
+            f"{schedule[-1][1]} clamped pivot(s))",
+            clamped_pivots=clamped, shift_schedule=schedule)
+
     def refactor(self, a_new: sp.spmatrix) -> SetupBreakdown:
         """Renew the factorization for a structure-identical matrix.
 
@@ -401,8 +474,10 @@ class SolverPlan:
                              "plan instead")
         t0 = time.perf_counter()
         a_bar = self._sysd.apply_ordering(a_new)
+        # factor BEFORE mutating plan state: a FactorBreakdownError from the
+        # on_breakdown policy leaves the old (working) operators in place
+        l_bar = self._factor(a_bar)
         self._sysd.a_bar = a_bar
-        l_bar = ic0_refactor(self._structure, a_bar, shift=self.shift)
         t1 = time.perf_counter()
         self._build_operators(l_bar)
         t2 = time.perf_counter()
@@ -414,8 +489,15 @@ class SolverPlan:
     # -- solving ------------------------------------------------------------
 
     def _pcg_fn(self, batched: bool, rtol: float, maxiter: int,
-                record_history: bool):
-        key = (batched, float(rtol), int(maxiter), bool(record_history))
+                record_history: bool,
+                divergence_factor: float | None = DIVERGENCE_FACTOR,
+                stagnation_window: int | None = STAGNATION_WINDOW):
+        dvf = float("inf") if divergence_factor is None \
+            else float(divergence_factor)
+        stw = maxiter + 1 if stagnation_window is None \
+            else int(stagnation_window)
+        key = (batched, float(rtol), int(maxiter), bool(record_history),
+               dvf, stw)
         fn = self._pcg_cache.get(key)
         if fn is not None:
             return fn
@@ -441,7 +523,8 @@ class SolverPlan:
                                          batched, spmv_backend=spmv_backend,
                                          interpret=interpret)
                 return core(spmv, apply_, b, rtol=rtol, maxiter=maxiter,
-                            record_history=record_history)
+                            record_history=record_history,
+                            divergence_factor=dvf, stagnation_window=stw)
             fn = jax.jit(run)
         elif self.layout == "round_major":
             def run(tables, sv, sc, b):
@@ -454,7 +537,8 @@ class SolverPlan:
                                   spmv_backend=spmv_backend,
                                   interpret=interpret)
                 return core(spmv, apply_, b, rtol=rtol, maxiter=maxiter,
-                            record_history=record_history)
+                            record_history=record_history,
+                            divergence_factor=dvf, stagnation_window=stw)
             fn = jax.jit(run)
         elif backend == "xla":
             n_final = self.n_padded
@@ -468,7 +552,8 @@ class SolverPlan:
                                   spmv_backend=spmv_backend,
                                   interpret=interpret)
                 return core(spmv, apply_, b, rtol=rtol, maxiter=maxiter,
-                            record_history=record_history)
+                            record_history=record_history,
+                            divergence_factor=dvf, stagnation_window=stw)
             fn = jax.jit(run)
         else:
             # index + pallas: the kernel preconditioner is not a pytree, so
@@ -482,14 +567,18 @@ class SolverPlan:
             def run(b):
                 self._trace_count += 1
                 return core(spmv, apply_, b, rtol=rtol, maxiter=maxiter,
-                            record_history=record_history)
+                            record_history=record_history,
+                            divergence_factor=dvf, stagnation_window=stw)
             fn = jax.jit(run)
         self._pcg_cache[key] = fn
         return fn
 
     def _run_pcg(self, batched: bool, rtol: float, maxiter: int,
-                 record_history: bool, b_dev: jax.Array):
-        fn = self._pcg_fn(batched, rtol, maxiter, record_history)
+                 record_history: bool, b_dev: jax.Array,
+                 divergence_factor: float | None = DIVERGENCE_FACTOR,
+                 stagnation_window: int | None = STAGNATION_WINDOW):
+        fn = self._pcg_fn(batched, rtol, maxiter, record_history,
+                          divergence_factor, stagnation_window)
         if self.layout == "round_major":
             return fn(self._precond.tables, self._spmv_vals,
                       self._spmv_cols, b_dev)
@@ -572,17 +661,26 @@ class SolverPlan:
             active=jnp.zeros((slab_width,), dtype=bool),
             iters=jnp.zeros((slab_width,), dtype=jnp.int32),
             relres=jnp.zeros((slab_width,), dtype=dt),
-            fresh=jnp.ones((slab_width,), dtype=bool))
+            fresh=jnp.ones((slab_width,), dtype=bool),
+            status=jnp.zeros((slab_width,), dtype=jnp.int32),
+            best=jnp.zeros((slab_width,), dtype=dt),
+            since_best=jnp.zeros((slab_width,), dtype=jnp.int32))
         if self.mesh is not None:   # slab state is replicated on the mesh
             sh = NamedSharding(self.mesh, P())
             state = SlabState(*(jax.device_put(v, sh) for v in state))
         return state
 
-    def _slab_fn(self, rtol: float, maxiter: int, quantum: int):
+    def _slab_fn(self, rtol: float, maxiter: int, quantum: int,
+                 divergence_factor: float | None = DIVERGENCE_FACTOR,
+                 stagnation_window: int | None = STAGNATION_WINDOW):
         """Jitted quantum-step over a resident slab; cached per signature
         exactly like ``_pcg_fn`` (operands as traced args where possible,
         so ``refactor`` never retraces)."""
-        key = ("slab", float(rtol), int(maxiter), int(quantum))
+        dvf = float("inf") if divergence_factor is None \
+            else float(divergence_factor)
+        stw = maxiter + 1 if stagnation_window is None \
+            else int(stagnation_window)
+        key = ("slab", float(rtol), int(maxiter), int(quantum), dvf, stw)
         fn = self._pcg_cache.get(key)
         if fn is not None:
             return fn
@@ -602,7 +700,9 @@ class SolverPlan:
                                          interpret=interpret)
                 return _pcg_slab_device(spmv, pre.apply_batched, state,
                                         rtol=rtol, maxiter=maxiter,
-                                        quantum=quantum)
+                                        quantum=quantum,
+                                        divergence_factor=dvf,
+                                        stagnation_window=stw)
             fn = jax.jit(run)
         elif self.layout == "round_major":
             def run(tables, sv, sc, state):
@@ -615,7 +715,9 @@ class SolverPlan:
                                   interpret=interpret)
                 return _pcg_slab_device(spmv, pre.apply_batched, state,
                                         rtol=rtol, maxiter=maxiter,
-                                        quantum=quantum)
+                                        quantum=quantum,
+                                        divergence_factor=dvf,
+                                        stagnation_window=stw)
             fn = jax.jit(run)
         elif backend == "xla":
             n_final = self.n_padded
@@ -629,7 +731,9 @@ class SolverPlan:
                                   interpret=interpret)
                 return _pcg_slab_device(spmv, pre.apply_batched, state,
                                         rtol=rtol, maxiter=maxiter,
-                                        quantum=quantum)
+                                        quantum=quantum,
+                                        divergence_factor=dvf,
+                                        stagnation_window=stw)
             fn = jax.jit(run)
         else:
             # index + pallas: operands are closure constants (cache cleared
@@ -643,22 +747,29 @@ class SolverPlan:
                 self._trace_count += 1
                 return _pcg_slab_device(spmv, pre.apply_batched, state,
                                         rtol=rtol, maxiter=maxiter,
-                                        quantum=quantum)
+                                        quantum=quantum,
+                                        divergence_factor=dvf,
+                                        stagnation_window=stw)
             fn = jax.jit(run)
         self._pcg_cache[key] = fn
         return fn
 
     def run_slab(self, state: SlabState, rtol: float = 1e-7,
                  maxiter: int = 10_000,
-                 quantum: int = 16) -> tuple[SlabState, jax.Array]:
+                 quantum: int = 16,
+                 divergence_factor: float | None = DIVERGENCE_FACTOR,
+                 stagnation_window: int | None = STAGNATION_WINDOW
+                 ) -> tuple[SlabState, jax.Array]:
         """Advance a resident slab by at most ``quantum`` PCG iterations.
 
         Columns flagged ``fresh`` are (re)initialized from their ``r``
         at entry; continuing columns resume bitwise where they left off
         (dispatch boundaries do not perturb their float sequences).
-        Returns ``(new_state, steps_taken)``.
+        Returns ``(new_state, steps_taken)``; every inactive column of the
+        new state has a definite ``status``.
         """
-        fn = self._slab_fn(rtol, maxiter, quantum)
+        fn = self._slab_fn(rtol, maxiter, quantum,
+                           divergence_factor, stagnation_window)
         if self.layout == "round_major":
             return fn(self._precond.tables, self._spmv_vals,
                       self._spmv_cols, state)
@@ -707,7 +818,8 @@ class SolverPlan:
         relres = float(state.relres[slot])
         res = PCGResult(x=x_out, iterations=int(state.iters[slot]),
                         relres=relres, converged=relres < rtol,
-                        history=np.zeros((0,)))
+                        history=np.zeros((0,)),
+                        status=status_name(state.status[slot]))
         return ICCGReport(
             method=self.method, result=res, n=self.n,
             n_padded=self.n_padded, n_colors=self.n_colors,
@@ -733,14 +845,15 @@ class SolverPlan:
         b_bar[self._sysd.perm] = b
         b_dev = self._embed(b_bar)
         t1 = time.perf_counter()
-        x, it, relres, hist = self._run_pcg(False, rtol, maxiter,
-                                            record_history, b_dev)
+        x, it, relres, status, hist = self._run_pcg(False, rtol, maxiter,
+                                                    record_history, b_dev)
         x = jax.block_until_ready(x)
         t2 = time.perf_counter()
         x_out = self._extract(x)
         relres = float(relres)
         res = PCGResult(x=x_out, iterations=int(it), relres=relres,
-                        converged=relres < rtol, history=np.asarray(hist))
+                        converged=relres < rtol, history=np.asarray(hist),
+                        status=status_name(status))
         return ICCGReport(
             method=self.method, result=res, n=self.n,
             n_padded=self.n_padded, n_colors=self.n_colors,
@@ -760,15 +873,16 @@ class SolverPlan:
         b_bar[self._sysd.perm] = b
         b_dev = self._embed(b_bar)
         t1 = time.perf_counter()
-        x, iters, relres, step, hist = self._run_pcg(True, rtol, maxiter,
-                                                     record_history, b_dev)
+        x, iters, relres, step, status, hist = self._run_pcg(
+            True, rtol, maxiter, record_history, b_dev)
         x = jax.block_until_ready(x)
         t2 = time.perf_counter()
         x_out = self._extract(x)
         relres = np.asarray(relres)
         res = BatchedPCGResult(x=x_out, iterations=np.asarray(iters),
                                relres=relres, converged=relres < rtol,
-                               n_steps=int(step), history=np.asarray(hist))
+                               n_steps=int(step), history=np.asarray(hist),
+                               status=np.asarray(status))
         return BatchedICCGReport(
             method=self.method, result=res, n=self.n,
             n_padded=self.n_padded, n_colors=self.n_colors,
@@ -785,7 +899,8 @@ def build_plan(a: sp.spmatrix, method: str = "hbmc", block_size: int = 32,
                layout: str = "round_major", mesh: Mesh | None = None,
                mesh_axis: str = "data",
                lane_multiple: int = 1,
-               spmv_backend: str = "xla") -> SolverPlan:
+               spmv_backend: str = "xla",
+               on_breakdown: str = "clamp") -> SolverPlan:
     """One-time setup: ordering -> round-parallel IC(0) -> packed operators.
 
     Returns a ``SolverPlan`` whose ``solve`` / ``solve_batched`` /
@@ -809,7 +924,7 @@ def build_plan(a: sp.spmatrix, method: str = "hbmc", block_size: int = 32,
                       backend=backend, interpret=interpret, layout=layout,
                       mesh=mesh, mesh_axis=mesh_axis,
                       lane_multiple=lane_multiple,
-                      spmv_backend=spmv_backend)
+                      spmv_backend=spmv_backend, on_breakdown=on_breakdown)
 
 
 # ---------------------------------------------------------------------------

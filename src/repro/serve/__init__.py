@@ -3,12 +3,15 @@
 ``step`` is not imported here — it pulls in ``repro.models``; import it
 explicitly (``from repro.serve import step``) when needed.
 """
-from .solver import (DEFAULT_COSTS, CacheStats, Completed, PlanBusyError,
-                     PlanCache, PlanKey, SolverService, VirtualClock,
-                     WallClock, pattern_fingerprint, values_fingerprint)
+from .faults import FAULT_KINDS, FaultInjector, FaultPlan
+from .solver import (DEFAULT_COSTS, SERVICE_STATUSES, CacheStats, Completed,
+                     PlanBusyError, PlanCache, PlanKey, QueueFullError,
+                     SolverService, VirtualClock, WallClock,
+                     pattern_fingerprint, values_fingerprint)
 
 __all__ = [
-    "DEFAULT_COSTS", "CacheStats", "Completed", "PlanBusyError",
-    "PlanCache", "PlanKey", "SolverService", "VirtualClock", "WallClock",
-    "pattern_fingerprint", "values_fingerprint",
+    "DEFAULT_COSTS", "FAULT_KINDS", "SERVICE_STATUSES", "CacheStats",
+    "Completed", "FaultInjector", "FaultPlan", "PlanBusyError", "PlanCache",
+    "PlanKey", "QueueFullError", "SolverService", "VirtualClock",
+    "WallClock", "pattern_fingerprint", "values_fingerprint",
 ]

@@ -48,7 +48,9 @@ import jax.numpy as jnp
 import numpy as np
 import scipy.sparse as sp
 
-from repro.core.iccg import SlabState
+from repro.core.iccg import (DIVERGENCE_FACTOR, STAGNATION_WINDOW,
+                             UNHEALTHY_STATUSES, SlabState, status_name)
+from repro.core.ic0 import FactorBreakdownError
 from repro.core.plan import SolverPlan, build_plan
 
 # ---------------------------------------------------------------------------
@@ -58,6 +60,7 @@ from repro.core.plan import SolverPlan, build_plan
 
 def _as_csr(a: sp.spmatrix) -> sp.csr_matrix:
     a = sp.csr_matrix(a)
+    a.sum_duplicates()   # duplicate-entry CSR corrupts packing downstream
     a.sort_indices()
     return a
 
@@ -99,6 +102,7 @@ class PlanKey:
     layout: str
     interpret: bool | None
     lane_multiple: int
+    on_breakdown: str = "clamp"
 
     @classmethod
     def from_matrix(cls, a: sp.spmatrix, *, method: str = "hbmc",
@@ -106,7 +110,7 @@ class PlanKey:
                     spmv_format: str = "ell", dtype=jnp.float64,
                     backend: str = "xla", interpret: bool | None = None,
                     layout: str = "round_major", lane_multiple: int = 1,
-                    spmv_backend: str = "xla",
+                    spmv_backend: str = "xla", on_breakdown: str = "clamp",
                     **extra) -> tuple["PlanKey", sp.csr_matrix]:
         """Key for (a, knobs); also returns the canonicalized CSR matrix."""
         if extra.get("mesh") is not None:
@@ -123,13 +127,20 @@ class PlanKey:
                   dtype=str(np.dtype(jnp.dtype(dtype))), backend=backend,
                   spmv_backend=spmv_backend, layout=layout,
                   interpret=interpret,
-                  lane_multiple=int(lane_multiple))
+                  lane_multiple=int(lane_multiple),
+                  on_breakdown=on_breakdown)
         return key, a
 
 
 class PlanBusyError(RuntimeError):
     """Raised when a value-change refactor targets a pinned (in-flight)
     plan: refactoring would corrupt resident slab columns mid-solve."""
+
+
+class QueueFullError(RuntimeError):
+    """Backpressure: ``submit`` refused because the service's bounded
+    queue (``max_queue``) is at capacity.  The caller should retry later
+    or shed load — nothing was enqueued."""
 
 
 @dataclasses.dataclass
@@ -327,25 +338,40 @@ class _Request:
     b: np.ndarray
     tag: Any
     arrival: float
+    deadline: float = np.inf  # absolute service-clock time; inf = none
     started: float = -1.0
     plan_status: str = ""     # cache status when its slab group resolved
 
 
+#: Terminal request statuses added by the serving layer on top of the
+#: core taxonomy (``repro.core.STATUS_NAMES``).
+SERVICE_STATUSES = ("CANCELLED", "DEADLINE")
+
+
 @dataclasses.dataclass
 class Completed:
-    """A retired request: solution + solve metadata + timing."""
+    """A retired request: solution + solve metadata + timing.
+
+    ``status`` is always definite: one of the core taxonomy
+    (``CONVERGED | MAXITER | BREAKDOWN | DIVERGED | STAGNATED``) or a
+    serving-layer terminal (``CANCELLED | DEADLINE``).  ``x`` is None for
+    requests that never produced a usable iterate (cancellation before
+    packing, factorization breakdown, unhealthy solves); a DEADLINE expiry
+    of an in-flight column returns its best-effort partial iterate.
+    """
     rid: int
     tag: Any
-    x: np.ndarray             # solution in the caller's original ordering
+    x: np.ndarray | None      # solution in the caller's original ordering
     iterations: int
     relres: float
     converged: bool
     arrival: float
-    started: float
+    started: float            # -1.0 if never packed into a slab
     finished: float
-    plan_status: str          # "hit" | "refactor" | "miss"
-    slab_width: int
-    slot: int                 # slab column that served this request
+    plan_status: str          # "hit" | "refactor" | "miss" | "" (never packed)
+    slab_width: int           # 0 if never packed
+    slot: int                 # slab column that served this request; -1 if none
+    status: str = "CONVERGED"
 
     @property
     def latency(self) -> float:
@@ -353,7 +379,12 @@ class Completed:
 
     @property
     def queue_wait(self) -> float:
-        return self.started - self.arrival
+        return (self.started if self.started >= 0 else self.finished) \
+            - self.arrival
+
+    @property
+    def failed(self) -> bool:
+        return self.status not in ("CONVERGED", "MAXITER")
 
 
 class _SlabGroup:
@@ -412,22 +443,45 @@ class SolverService:
     blocks later requests of the same key — never requests of other keys.
     A value-change request therefore waits for the group to drain, then
     takes the ``refactor`` fast path.
+
+    Robustness: every request terminates with a definite ``status``.
+    Columns whose slab health goes terminal-unhealthy (BREAKDOWN /
+    DIVERGED / STAGNATED) retire the moment their dispatch ends —
+    quarantined (``n_quarantined``), slot freed — instead of holding the
+    slab for their full ``maxiter`` budget; their slab neighbours are
+    untouched (bitwise — column ops never mix lanes).  A matrix whose
+    factorization raises :class:`FactorBreakdownError` fails its request
+    with status BREAKDOWN and poisons its (key, values) pair so follow-up
+    requests fail fast without re-attempting the build.  ``max_queue``
+    bounds admission (``QueueFullError``), ``timeout=``/``default_timeout``
+    set per-request deadlines on the service clock, and ``cancel`` revokes
+    queued or in-flight requests immediately.
     """
 
     def __init__(self, cache: PlanCache | None = None, *,
                  slab_width: int = 8, quantum: int = 16,
                  rtol: float = 1e-7, maxiter: int = 10_000,
                  clock=None, record_dispatches: bool = False,
+                 max_queue: int | None = None,
+                 default_timeout: float | None = None,
+                 divergence_factor: float | None = DIVERGENCE_FACTOR,
+                 stagnation_window: int | None = STAGNATION_WINDOW,
                  **plan_knobs):
         if slab_width < 1:
             raise ValueError(f"slab_width must be >= 1, got {slab_width}")
         if quantum < 1:
             raise ValueError(f"quantum must be >= 1, got {quantum}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.cache = cache if cache is not None else PlanCache()
         self.slab_width = slab_width
         self.quantum = quantum
         self.rtol = rtol
         self.maxiter = maxiter
+        self.max_queue = max_queue
+        self.default_timeout = default_timeout
+        self.divergence_factor = divergence_factor
+        self.stagnation_window = stagnation_window
         self.clock = clock if clock is not None else WallClock()
         self.plan_knobs = dict(plan_knobs)
         self._np_dtype = np.dtype(jnp.dtype(
@@ -439,16 +493,30 @@ class SolverService:
         self.completed: dict[int, Completed] = {}
         self.record_dispatches = record_dispatches
         self.dispatch_log: list[dict] = []
+        self.n_quarantined = 0
+        # (key, values_fp) pairs whose factorization broke down terminally
+        self._poisoned: set[tuple[PlanKey, str]] = set()
 
     # -- submission ---------------------------------------------------------
 
     def submit(self, a: sp.spmatrix, b: np.ndarray, *,
-               arrival_time: float | None = None, tag: Any = None) -> int:
+               arrival_time: float | None = None, tag: Any = None,
+               timeout: float | None = None) -> int:
         """Enqueue one RHS; returns a request id.
 
         ``arrival_time`` (simulated clocks only) defers admission until
         the virtual clock reaches it — the hook for seeded arrival traces.
+        ``timeout`` (service-clock seconds from arrival; defaults to the
+        service's ``default_timeout``) sets the request's deadline: a
+        request not finished by then terminates with status DEADLINE.
+        Raises :class:`QueueFullError` when ``max_queue`` requests are
+        already waiting (backpressure — nothing is enqueued).
         """
+        if (self.max_queue is not None
+                and len(self._queue) + len(self._pending) >= self.max_queue):
+            raise QueueFullError(
+                f"queue is at capacity ({self.max_queue} waiting); retry "
+                f"later or shed load")
         b = np.asarray(b)
         if b.ndim != 1:
             raise ValueError(
@@ -473,10 +541,15 @@ class SolverService:
                     "(VirtualClock); with a wall clock, pace submissions "
                     "from the caller instead")
             arrival = float(arrival_time)
+        if timeout is None:
+            timeout = self.default_timeout
+        if timeout is not None and timeout <= 0:
+            raise ValueError(f"timeout must be > 0, got {timeout}")
+        deadline = np.inf if timeout is None else arrival + float(timeout)
         req = _Request(rid=self._next_rid, key=key,
                        values_fp=values_fingerprint(a_csr), a=a_csr,
                        b=np.asarray(b, dtype=self._np_dtype), tag=tag,
-                       arrival=arrival)
+                       arrival=arrival, deadline=deadline)
         self._next_rid += 1
         if arrival_time is None:
             self._queue.append(req)
@@ -484,6 +557,53 @@ class SolverService:
             self._pending.append(req)
             self._pending.sort(key=lambda r: (r.arrival, r.rid))
         return req.rid
+
+    def cancel(self, rid: int) -> bool:
+        """Revoke a request immediately; returns True if it was revoked.
+
+        Works on pending, queued and in-flight requests: the request
+        completes with status CANCELLED (``x = None``), an in-flight
+        column's slot is freed at once.  Returns False when ``rid`` is
+        unknown or already completed (too late to cancel).
+        """
+        for lst in (self._queue, self._pending):
+            for i, req in enumerate(lst):
+                if req.rid == rid:
+                    del lst[i]
+                    self._fail(req, "CANCELLED")
+                    return True
+        for key, group in self._groups.items():
+            for slot, req in enumerate(group.slots):
+                if req is not None and req.rid == rid:
+                    group.clear(slot)
+                    self._fail(req, "CANCELLED", slab_width=group.width,
+                               slot=slot)
+                    return True
+        return False
+
+    def _fail(self, req: _Request, status: str, *,
+              x: np.ndarray | None = None, iterations: int = 0,
+              relres: float = np.inf, slab_width: int = 0,
+              slot: int = -1) -> Completed:
+        """Terminate ``req`` with a non-success ``status`` right now."""
+        c = Completed(rid=req.rid, tag=req.tag, x=x, iterations=iterations,
+                      relres=relres, converged=False, arrival=req.arrival,
+                      started=req.started, finished=self.clock.now(),
+                      plan_status=req.plan_status, slab_width=slab_width,
+                      slot=slot, status=status)
+        self.completed[req.rid] = c
+        return c
+
+    def _reap_expired(self) -> list[Completed]:
+        """Fail every waiting request whose deadline has passed."""
+        now = self.clock.now()
+        done: list[Completed] = []
+        for lst in (self._queue, self._pending):
+            expired = [r for r in lst if r.deadline <= now]
+            if expired:
+                lst[:] = [r for r in lst if r.deadline > now]
+                done.extend(self._fail(r, "DEADLINE") for r in expired)
+        return done
 
     # -- scheduling ---------------------------------------------------------
 
@@ -521,14 +641,30 @@ class SolverService:
 
     def _pack_queue(self) -> None:
         """FIFO pass over the queue; per-key blocking preserves order
-        within a key while other keys keep flowing."""
+        within a key while other keys keep flowing.
+
+        A request whose plan build/refactor raises
+        :class:`FactorBreakdownError` (the ``on_breakdown`` policy refused
+        a degraded factor, or the matrix itself is non-finite) fails with
+        status BREAKDOWN and poisons its (key, values) pair — identical
+        follow-ups fail fast without re-running the factorization.
+        """
         blocked: set[PlanKey] = set()
         remaining: list[_Request] = []
         for req in self._queue:
             if req.key in blocked:
                 remaining.append(req)
                 continue
-            group = self._resolve_group(req)
+            if (req.key, req.values_fp) in self._poisoned:
+                self._fail(req, "BREAKDOWN")
+                continue
+            try:
+                group = self._resolve_group(req)
+            except FactorBreakdownError:
+                self.clock.charge("build")   # the attempt was paid for
+                self._poisoned.add((req.key, req.values_fp))
+                self._fail(req, "BREAKDOWN")
+                continue
             if group is None:
                 blocked.add(req.key)
                 remaining.append(req)
@@ -555,7 +691,9 @@ class SolverService:
                 continue
             group.state, steps = group.plan.run_slab(
                 group.state, rtol=self.rtol, maxiter=self.maxiter,
-                quantum=self.quantum)
+                quantum=self.quantum,
+                divergence_factor=self.divergence_factor,
+                stagnation_window=self.stagnation_window)
             steps = int(steps)
             self.clock.charge("dispatch")
             self.clock.charge("iteration", steps)
@@ -569,9 +707,41 @@ class SolverService:
             active = np.asarray(group.state.active)
             iters = np.asarray(group.state.iters)
             relres = np.asarray(group.state.relres)
+            codes = np.asarray(group.state.status)
+            now = self.clock.now()
             x_host = None
             for slot, req in enumerate(group.slots):
-                if req is None or active[slot]:
+                if req is None:
+                    continue
+                if active[slot]:
+                    if req.deadline > now:
+                        continue
+                    # in-flight deadline expiry: terminate with the
+                    # best-effort partial iterate, free the slot now
+                    if x_host is None:
+                        x_host = np.asarray(group.state.x)
+                    self.clock.charge("retire")
+                    done.append(self._fail(
+                        req, "DEADLINE",
+                        x=group.plan.extract_solution(x_host[:, slot]),
+                        iterations=int(iters[slot]),
+                        relres=float(relres[slot]),
+                        slab_width=group.width, slot=slot))
+                    group.clear(slot)
+                    continue
+                st = status_name(codes[slot])
+                unhealthy = st in UNHEALTHY_STATUSES
+                if unhealthy:
+                    # quarantine: structured failure, slot freed this very
+                    # dispatch — no iterate is returned (the column's last
+                    # finite state is not a solution)
+                    self.n_quarantined += 1
+                    self.clock.charge("retire")
+                    done.append(self._fail(
+                        req, st, iterations=int(iters[slot]),
+                        relres=float(relres[slot]),
+                        slab_width=group.width, slot=slot))
+                    group.clear(slot)
                     continue
                 if x_host is None:
                     x_host = np.asarray(group.state.x)
@@ -584,7 +754,7 @@ class SolverService:
                     converged=rr < self.rtol, arrival=req.arrival,
                     started=req.started, finished=self.clock.now(),
                     plan_status=req.plan_status,
-                    slab_width=group.width, slot=slot))
+                    slab_width=group.width, slot=slot, status=st))
                 group.clear(slot)
             if group.n_occupied == 0:
                 self._teardown(key)
@@ -597,19 +767,22 @@ class SolverService:
         self.cache.unpin(key)
 
     def step(self) -> list[Completed]:
-        """One scheduling cycle: admit → pack → dispatch → retire.
+        """One scheduling cycle: reap → admit → pack → dispatch → retire.
 
-        Returns the requests that completed this cycle.  With a virtual
-        clock, an idle service (nothing queued or resident) jumps straight
-        to the next pending arrival instead of spinning.
+        Returns the requests that completed this cycle (including ones
+        terminated by deadline expiry or cancellation fallout).  With a
+        virtual clock, an idle service (nothing queued or resident) jumps
+        straight to the next pending arrival instead of spinning.
         """
         self._admit_due()
         if (not self._queue and self.n_in_flight == 0 and self._pending
                 and getattr(self.clock, "simulated", False)):
             self.clock.advance_to(self._pending[0].arrival)
             self._admit_due()
+        done = self._reap_expired()
         self._pack_queue()
-        return self._dispatch_and_retire()
+        done.extend(self._dispatch_and_retire())
+        return done
 
     def drain(self, max_steps: int = 100_000) -> list[Completed]:
         """Step until every admitted and pending request has completed."""

@@ -1,0 +1,375 @@
+"""Adversarial-matrix tier: breakdown detection + recovery on inputs the
+ICCG method is not entitled to.
+
+What is pinned here:
+
+  1. The status taxonomy itself (codes, names, helpers).
+  2. The zero-RHS and NaN-column regressions: ``pcg`` with b = 0 returns
+     x = 0 / CONVERGED immediately; a NaN column in ``pcg_batched``
+     deactivates with an explicit BREAKDOWN instead of silently falling
+     out of the active mask.
+  3. Adversarial matrices (indefinite / semi-definite / near-singular /
+     NaN-contaminated) through single, batched and slab paths, across
+     hbmc/bmc orderings and the xla/pallas trisolve backends: every solve
+     terminates with a definite status from the kind's expected set and a
+     fully finite iterate (broken steps roll back, never leak NaN).
+  4. Healthy columns of a mixed slab are bitwise-equal to an all-healthy
+     run at the same width — one column's fault never perturbs neighbours.
+  5. IC(0) clamped-pivot accounting: sequential and round-parallel sweeps
+     report identical counts; the plan's ``on_breakdown`` policies (clamp
+     / raise / escalate) and the recorded shift schedule.
+  6. The DIVERGED and STAGNATED monitor guards are reachable and select
+     the documented terminal codes.
+
+Everything here must hold with the default knobs too — the monitoring is
+select-based, so the healthy-path float sequences of the rest of the test
+suite (which runs unmodified) are the other half of this tier's contract.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import (BREAKDOWN, CONVERGED, DIVERGED, MAXITER, RUNNING,
+                        STAGNATED, STATUS_NAMES, UNHEALTHY_STATUSES,
+                        FactorBreakdownError, build_plan, ic0, ic0_rounds,
+                        pcg, pcg_batched, status_name)
+from repro.core.matrices import laplace_2d
+from repro.core.solvers import _order_system
+from repro.serve.faults import (EXPECTED_STATUSES, indefinite_matrix,
+                                near_singular_matrix, semidefinite_matrix)
+
+KNOBS = dict(method="hbmc", block_size=8, w=4)
+
+ADVERSARIAL = [
+    ("indefinite", indefinite_matrix),
+    ("semidefinite", semidefinite_matrix),
+    ("near_singular", near_singular_matrix),
+]
+
+
+def _rhs(n, seed=0):
+    return np.random.default_rng(seed).standard_normal(n)
+
+
+# ---------------------------------------------------------------------------
+# 1. Taxonomy.
+# ---------------------------------------------------------------------------
+
+def test_status_taxonomy():
+    assert STATUS_NAMES == ("RUNNING", "CONVERGED", "MAXITER", "BREAKDOWN",
+                            "DIVERGED", "STAGNATED")
+    assert [STATUS_NAMES[c] for c in
+            (RUNNING, CONVERGED, MAXITER, BREAKDOWN, DIVERGED,
+             STAGNATED)] == list(STATUS_NAMES)
+    assert status_name(BREAKDOWN) == "BREAKDOWN"
+    assert set(UNHEALTHY_STATUSES) == {"BREAKDOWN", "DIVERGED", "STAGNATED"}
+    # RUNNING is an internal code only — never a terminal status
+    assert "RUNNING" not in UNHEALTHY_STATUSES
+
+
+# ---------------------------------------------------------------------------
+# 2. Regressions: zero RHS and explicit NaN-column statuses.
+# ---------------------------------------------------------------------------
+
+def test_pcg_zero_rhs_converges_immediately():
+    b = jnp.zeros(16)
+    res = pcg(lambda v: 2.0 * v, lambda v: v, b)
+    assert res.status == "CONVERGED"
+    assert res.converged
+    assert res.iterations == 0
+    np.testing.assert_array_equal(res.x, np.zeros(16))
+
+
+def test_plan_zero_rhs_converges_immediately():
+    a = laplace_2d(6, 6)
+    plan = build_plan(a, **KNOBS)
+    rep = plan.solve(np.zeros(a.shape[0]))
+    assert rep.result.status == "CONVERGED"
+    assert rep.result.iterations == 0
+    np.testing.assert_array_equal(rep.x, np.zeros(a.shape[0]))
+
+
+def test_pcg_nan_rhs_is_breakdown_not_silence():
+    b = jnp.asarray(_rhs(16)).at[3].set(jnp.nan)
+    res = pcg(lambda v: 2.0 * v, lambda v: v, b)
+    assert res.status == "BREAKDOWN"
+    assert not res.converged
+    assert res.iterations == 0
+    # the reported iterate is the last finite one (x0 = 0), never NaN
+    assert np.isfinite(res.x).all()
+
+
+def test_pcg_batched_nan_column_explicit_breakdown():
+    """A NaN column deactivates with an explicit BREAKDOWN status while its
+    neighbours' float sequences are bitwise-untouched (the old behavior
+    silently dropped the column out of ``active`` via a NaN comparison)."""
+    a = laplace_2d(6, 6)
+    n = a.shape[0]
+    plan = build_plan(a, **KNOBS)
+    b = np.stack([_rhs(n, 0), _rhs(n, 1), _rhs(n, 2)], axis=1)
+    b_bad = b.copy()
+    b_bad[5, 1] = np.nan
+
+    mixed = plan.solve_batched(b_bad)
+    assert mixed.result.status_names == ["CONVERGED", "BREAKDOWN",
+                                         "CONVERGED"]
+    assert list(mixed.result.converged) == [True, False, True]
+    assert mixed.result.iterations[1] == 0
+    assert np.isfinite(mixed.x).all()
+
+    # healthy lanes bitwise vs the all-healthy batch at the same width:
+    # lane ops never mix columns, so the fault is invisible to neighbours
+    clean = plan.solve_batched(b)
+    np.testing.assert_array_equal(mixed.x[:, 0], clean.x[:, 0])
+    np.testing.assert_array_equal(mixed.x[:, 2], clean.x[:, 2])
+    np.testing.assert_array_equal(mixed.result.iterations[[0, 2]],
+                                  clean.result.iterations[[0, 2]])
+
+
+# ---------------------------------------------------------------------------
+# 3. Adversarial matrices through every solve path.
+# ---------------------------------------------------------------------------
+
+def _assert_definite(status, kind, x):
+    assert status in EXPECTED_STATUSES[kind], \
+        f"{kind}: status {status!r} not in {sorted(EXPECTED_STATUSES[kind])}"
+    assert status != "RUNNING"
+    assert np.isfinite(np.asarray(x)).all(), \
+        f"{kind}: non-finite iterate leaked through a {status} termination"
+
+
+@pytest.mark.parametrize("method", ["hbmc", "bmc"])
+@pytest.mark.parametrize("kind,make", ADVERSARIAL,
+                         ids=[k for k, _ in ADVERSARIAL])
+def test_adversarial_matrix_definite_status(kind, make, method):
+    a = make(6)
+    n = a.shape[0]
+    plan = build_plan(a, method=method, block_size=8, w=4)
+    maxiter = 300
+
+    single = plan.solve(_rhs(n), maxiter=maxiter)
+    _assert_definite(single.result.status, kind, single.x)
+
+    b2 = np.stack([_rhs(n, 1), _rhs(n, 2)], axis=1)
+    batched = plan.solve_batched(b2, maxiter=maxiter)
+    for s in batched.result.status_names:
+        _assert_definite(s, kind, batched.x)
+
+    slab = plan.solve_slab(_rhs(n, 3), slab_width=4, slot=2,
+                           maxiter=maxiter)
+    _assert_definite(slab.result.status, kind, slab.x)
+
+
+@pytest.mark.parametrize("kind,make", ADVERSARIAL,
+                         ids=[k for k, _ in ADVERSARIAL])
+def test_adversarial_matrix_pallas_backend(kind, make):
+    """Same contract through the Pallas trisolve kernel (interpret mode on
+    CPU) — the monitor lives above the kernel, so the taxonomy must be
+    backend-invariant."""
+    a = make(6)
+    n = a.shape[0]
+    plan = build_plan(a, backend="pallas", interpret=True, **KNOBS)
+    rep = plan.solve(_rhs(n), maxiter=150)
+    _assert_definite(rep.result.status, kind, rep.x)
+
+
+def test_nan_matrix_build_raises():
+    a = laplace_2d(6, 6)
+    a.data = a.data.copy()
+    a.data[0] = np.nan
+    with pytest.raises(FactorBreakdownError, match="not finite"):
+        build_plan(a, **KNOBS)
+
+
+def test_nan_matrix_refactor_raises_and_preserves_plan():
+    """A refactor hitting FactorBreakdownError leaves the old (working)
+    operators in place — the plan keeps serving the previous matrix."""
+    a = laplace_2d(6, 6)
+    n = a.shape[0]
+    plan = build_plan(a, **KNOBS)
+    b = _rhs(n)
+    before = plan.solve(b)
+
+    a_nan = a.copy()
+    a_nan.data = a_nan.data.copy()
+    a_nan.data[0] = np.nan
+    with pytest.raises(FactorBreakdownError):
+        plan.refactor(a_nan)
+
+    after = plan.solve(b)
+    assert after.result.status == "CONVERGED"
+    np.testing.assert_array_equal(after.x, before.x)
+
+
+# ---------------------------------------------------------------------------
+# 4. Mixed slab: the fault column is invisible to healthy neighbours.
+# ---------------------------------------------------------------------------
+
+def test_mixed_slab_healthy_columns_bitwise():
+    a = laplace_2d(6, 6)
+    n = a.shape[0]
+    plan = build_plan(a, **KNOBS)
+    width, bad_slot = 4, 1
+    cols = [_rhs(n, s) for s in range(width)]
+
+    def run(slab_cols):
+        state = plan.new_slab_state(width)
+        r = state.r
+        for s, col in enumerate(slab_cols):
+            r = r.at[:, s].set(plan.embed_rhs(np.asarray(col)))
+        state = state._replace(r=r)
+        state, _ = plan.run_slab(state, maxiter=400, quantum=400)
+        return state
+
+    bad = np.asarray(cols[bad_slot]).copy()
+    bad[7] = np.nan
+    mixed = run(cols[:bad_slot] + [bad] + cols[bad_slot + 1:])
+    clean = run(cols)
+
+    assert status_name(mixed.status[bad_slot]) == "BREAKDOWN"
+    assert not bool(mixed.active[bad_slot])
+    for s in range(width):
+        if s == bad_slot:
+            continue
+        assert status_name(mixed.status[s]) == "CONVERGED"
+        np.testing.assert_array_equal(np.asarray(mixed.x[:, s]),
+                                      np.asarray(clean.x[:, s]))
+        assert int(mixed.iters[s]) == int(clean.iters[s])
+        np.testing.assert_array_equal(np.asarray(mixed.relres[s]),
+                                      np.asarray(clean.relres[s]))
+
+
+# ---------------------------------------------------------------------------
+# 5. Clamped-pivot accounting and the on_breakdown policies.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["hbmc", "bmc", "natural"])
+def test_clamp_counts_agree_sequential_vs_round_parallel(method):
+    a = indefinite_matrix(6)
+    sysd = _order_system(sp.csr_matrix(a), None, method, 8, 4)
+    l_seq = ic0(sysd.a_bar)
+    l_rnd = ic0_rounds(sysd.a_bar, sysd.fwd_rounds)
+    assert l_seq.clamped_pivots > 0
+    assert l_rnd.clamped_pivots == l_seq.clamped_pivots
+    np.testing.assert_array_equal(l_rnd.data, l_seq.data)
+
+
+def test_healthy_factor_reports_zero_clamps():
+    a = laplace_2d(6, 6)
+    assert ic0(a).clamped_pivots == 0
+    plan = build_plan(a, **KNOBS)
+    assert plan.clamped_pivots == 0
+    assert plan.shift_schedule == [(0.0, 0)]
+    assert plan.effective_shift == 0.0
+
+
+def test_on_breakdown_clamp_records_but_proceeds():
+    plan = build_plan(indefinite_matrix(6), **KNOBS)   # default "clamp"
+    assert plan.on_breakdown == "clamp"
+    assert plan.clamped_pivots > 0
+    assert plan.shift_schedule == [(0.0, plan.clamped_pivots)]
+    assert plan.effective_shift == 0.0
+
+
+def test_on_breakdown_raise():
+    with pytest.raises(FactorBreakdownError) as exc:
+        build_plan(indefinite_matrix(6), on_breakdown="raise", **KNOBS)
+    assert exc.value.clamped_pivots > 0
+    assert len(exc.value.shift_schedule) == 1
+    assert exc.value.shift_schedule[0][1] == exc.value.clamped_pivots
+
+
+def test_on_breakdown_escalate_finds_clean_shift():
+    plan = build_plan(indefinite_matrix(6), on_breakdown="escalate", **KNOBS)
+    assert plan.clamped_pivots == 0
+    assert plan.effective_shift > 0.0
+    # schedule: the failed base attempt plus monotone escalations ending
+    # in the clean factor actually in use
+    shifts = [s for s, _ in plan.shift_schedule]
+    clamps = [c for _, c in plan.shift_schedule]
+    assert len(plan.shift_schedule) >= 2
+    assert shifts == sorted(shifts)
+    assert clamps[0] > 0 and clamps[-1] == 0
+    assert shifts[-1] == plan.effective_shift
+    # the escalated factor is a usable preconditioner: solves terminate
+    # with a definite status
+    rep = plan.solve(_rhs(plan.n), maxiter=300)
+    _assert_definite(rep.result.status, "indefinite", rep.x)
+
+
+def test_on_breakdown_escalate_noop_on_healthy_matrix():
+    plan = build_plan(laplace_2d(6, 6), on_breakdown="escalate", **KNOBS)
+    assert plan.effective_shift == 0.0
+    assert plan.shift_schedule == [(0.0, 0)]
+
+
+def test_escalate_refactor_records_schedule():
+    a = laplace_2d(6, 6)
+    plan = build_plan(a, on_breakdown="escalate", **KNOBS)
+    bad = indefinite_matrix(6)   # same pattern, indefinite values
+    plan.refactor(bad)
+    assert plan.clamped_pivots == 0
+    assert plan.effective_shift > 0.0
+    assert len(plan.shift_schedule) >= 2
+
+
+def test_unknown_on_breakdown_rejected():
+    with pytest.raises(ValueError, match="on_breakdown"):
+        build_plan(laplace_2d(6, 6), on_breakdown="explode", **KNOBS)
+
+
+# ---------------------------------------------------------------------------
+# 6. The DIVERGED / STAGNATED guards are reachable.
+# ---------------------------------------------------------------------------
+
+def _diag_op(d):
+    d = jnp.asarray(d)
+    return lambda v: d * v if v.ndim == 1 else d[:, None] * v
+
+
+def test_pcg_diverged_guard():
+    """With a divergence factor below 1, any residual-norm step that fails
+    to beat the running best trips the guard — a deterministic probe of
+    the DIVERGED pathway (real divergence takes many more iterations but
+    exercises the identical select)."""
+    d = np.linspace(1.0, 10.0, 16)
+    b = jnp.asarray(_rhs(16, 4))
+    res = pcg(_diag_op(d), lambda v: v, b, divergence_factor=1e-6)
+    assert res.status == "DIVERGED"
+    assert not res.converged
+    assert np.isfinite(res.x).all()
+
+
+def test_pcg_batched_diverged_guard():
+    d = np.linspace(1.0, 10.0, 16)
+    b = jnp.asarray(np.stack([_rhs(16, 5), _rhs(16, 6)], axis=1))
+    res = pcg_batched(_diag_op(d), lambda v: v, b, divergence_factor=1e-6)
+    assert res.status_names == ["DIVERGED", "DIVERGED"]
+
+
+def _near_singular_op():
+    a = near_singular_matrix(6).toarray()
+    return lambda v: jnp.asarray(a) @ v
+
+
+def test_pcg_stagnated_guard():
+    """Unpreconditioned CG on the near-singular Laplacian stalls well
+    before its tight rtol; the stagnation window terminates it with
+    STAGNATED instead of burning the full maxiter budget."""
+    b = jnp.asarray(_rhs(36, 7))
+    res = pcg(_near_singular_op(), lambda v: v, b, rtol=1e-14,
+              maxiter=5000, stagnation_window=10)
+    assert res.status == "STAGNATED"
+    assert res.iterations < 5000
+    assert np.isfinite(res.x).all()
+
+
+def test_monitor_knobs_off_restore_maxiter():
+    """divergence_factor=None / stagnation_window=None disable the guards:
+    the same stalled solve then runs to MAXITER exactly as before."""
+    b = jnp.asarray(_rhs(36, 7))
+    res = pcg(_near_singular_op(), lambda v: v, b, rtol=1e-14, maxiter=30,
+              divergence_factor=None, stagnation_window=None)
+    assert res.status == "MAXITER"
+    assert res.iterations == 30
