@@ -274,6 +274,28 @@ def bench_refactor(name, a, reps):
     }
 
 
+def bench_validate_overhead(name, a, reps):
+    """Cold build_plan with the static race detector on vs off.
+
+    ``validate="cheap"`` (round/DAG audit only) must stay under 5% of the
+    cold setup on lap3d_16_27 — the knob is meant to be affordable enough
+    to leave on in serving admission control.  ``full`` (adds the packed
+    table and IC(0) structure proofs) is reported for the trajectory."""
+    a = sp.csr_matrix(a)
+    kw = dict(method="hbmc", block_size=BS, w=W)
+    off_s, _ = _best(lambda: build_plan(a, validate="off", **kw), reps)
+    cheap_s, _ = _best(lambda: build_plan(a, validate="cheap", **kw), reps)
+    full_s, _ = _best(lambda: build_plan(a, validate="full", **kw), reps)
+    return {
+        "problem": name, "n": int(a.shape[0]),
+        "build_off_s": round(off_s, 5),
+        "build_cheap_s": round(cheap_s, 5),
+        "build_full_s": round(full_s, 5),
+        "cheap_overhead_pct": round(100.0 * (cheap_s - off_s) / off_s, 2),
+        "full_overhead_pct": round(100.0 * (full_s - off_s) / off_s, 2),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -293,6 +315,8 @@ def main() -> None:
     reuse = [bench_plan_reuse(name, a, reps, maxiter)
              for name, a in problems]
     refactor = [bench_refactor(name, a, reps) for name, a in problems]
+    validate = [bench_validate_overhead(name, a, reps)
+                for name, a in problems]
 
     doc = {
         "schema": "bench_setup/v1",
@@ -303,6 +327,7 @@ def main() -> None:
         "setup_breakdown": breakdown,
         "plan_reuse": reuse,
         "refactor": refactor,
+        "validate_overhead": validate,
     }
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2)
@@ -327,6 +352,12 @@ def main() -> None:
         print(f"{r['problem']:14s} {r['full_setup_s']:8.3f} "
               f"{r['refactor_s']:11.3f} {r['full_over_refactor']:5.1f}x "
               f"{r['post_refactor_solve_s']:13.5f} {r['retraces']:9d}")
+    print(f"\n{'problem':14s} {'off s':>8s} {'cheap s':>8s} {'full s':>8s} "
+          f"{'cheap +%':>9s} {'full +%':>9s}")
+    for r in validate:
+        print(f"{r['problem']:14s} {r['build_off_s']:8.3f} "
+              f"{r['build_cheap_s']:8.3f} {r['build_full_s']:8.3f} "
+              f"{r['cheap_overhead_pct']:8.2f}% {r['full_overhead_pct']:8.2f}%")
     print(f"\nwrote {args.out}")
 
 

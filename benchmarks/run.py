@@ -8,9 +8,7 @@ human-readable tables.
 from __future__ import annotations
 
 import argparse
-import json
 import os
-import sys
 import time
 
 import jax

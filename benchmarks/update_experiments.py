@@ -4,8 +4,6 @@
 """
 from __future__ import annotations
 
-import json
-import os
 import re
 import sys
 

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.models import init_params
-from repro.serve.step import greedy_generate, prefill, serve_step
+from repro.serve.step import greedy_generate, prefill
 
 
 def main():

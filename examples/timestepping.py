@@ -74,8 +74,8 @@ def main():
 
     # the cold-path comparison: what every step WOULD have paid
     t0 = time.perf_counter()
-    rep_cold = solve_iccg(stepping_matrix(lap, dt), u, method="hbmc",
-                          block_size=16, w=8, rtol=1e-8)
+    solve_iccg(stepping_matrix(lap, dt), u, method="hbmc",
+               block_size=16, w=8, rtol=1e-8)
     cold_s = time.perf_counter() - t0
     warm_s = total_solve / n_steps
     print(f"cold solve_iccg per step: {cold_s*1e3:.1f} ms; "

@@ -1,0 +1,40 @@
+"""Static analysis: schedule race detection + jaxpr/kernel contract linting.
+
+Proves a plan is race-free and contract-conforming *before* it dispatches:
+
+  ``schedule``       dependency-DAG race detector over rounds, packed
+                     trisolve tables and the IC(0) step schedule, with
+                     machine-readable ``Violation`` witnesses
+  ``contracts``      jaxpr linter with per-lowering-path primitive budgets
+  ``kernel_checks``  static Pallas kernel checks (grid/BlockSpec
+                     divisibility, gather index bounds, VMEM footprint)
+
+``build_plan(a, validate="cheap"|"full")`` runs the detector at setup;
+``python -m repro.analysis`` audits matrices/orderings/plans from the CLI.
+"""
+from .contracts import (DISTRIBUTED_APPLY, FULL_PALLAS_ITERATION,
+                        PALLAS_SPMV, PRECONDITIONED_ITERATION,
+                        ROUND_MAJOR_APPLY, ContractError, PrimitiveBudget,
+                        assert_budget, count_primitive, lint,
+                        primitive_counts, primitives, retraces)
+from .kernel_checks import (VMEM_BUDGET_BYTES, assert_plan_kernels,
+                            check_plan_kernels, check_sell_spmv,
+                            check_trisolve_fused, sell_spmv_vmem_bytes,
+                            trisolve_fused_vmem_bytes)
+from .schedule import (VALIDATE_MODES, ScheduleError, Violation,
+                       assert_plan_valid, check_fused_tables,
+                       check_ic0_structure, check_reversed_rounds,
+                       check_rounds, check_step_tables, validate_plan)
+
+__all__ = [
+    "DISTRIBUTED_APPLY", "FULL_PALLAS_ITERATION", "PALLAS_SPMV",
+    "PRECONDITIONED_ITERATION", "ROUND_MAJOR_APPLY", "ContractError",
+    "PrimitiveBudget", "assert_budget", "count_primitive", "lint",
+    "primitive_counts", "primitives", "retraces",
+    "VMEM_BUDGET_BYTES", "assert_plan_kernels", "check_plan_kernels",
+    "check_sell_spmv", "check_trisolve_fused", "sell_spmv_vmem_bytes",
+    "trisolve_fused_vmem_bytes",
+    "VALIDATE_MODES", "ScheduleError", "Violation", "assert_plan_valid",
+    "check_fused_tables", "check_ic0_structure", "check_reversed_rounds",
+    "check_rounds", "check_step_tables", "validate_plan",
+]

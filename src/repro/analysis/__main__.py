@@ -1,0 +1,109 @@
+"""Audit matrices / orderings / plans from the command line.
+
+    PYTHONPATH=src python -m repro.analysis
+        [--problems thermal2,parabolic_fem,...]   (default: all paper five)
+        [--methods hbmc,bmc,mc]                   (default: hbmc,bmc,mc)
+        [--scale tiny|small|bench]                (default: tiny)
+        [--validate cheap|full]                   (default: full)
+        [--contracts]        also lint the apply/SpMV jaxprs
+        [--backend xla|pallas] [--spmv-backend xla|pallas]
+
+For every (problem, method) pair this builds a plan, runs the schedule
+race detector at the requested depth, the static kernel checks the
+backend selection implies, and (with ``--contracts``) the jaxpr budget of
+the round-major apply.  Prints one line per audit; on failure prints every
+witness and exits 1.  ``laplace2d`` / ``laplace3d`` are accepted as extra
+problem names alongside the paper generators.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import (ROUND_MAJOR_APPLY, check_plan_kernels, lint,
+                            validate_plan)
+from repro.core import build_plan
+from repro.core.matrices import (PAPER_PROBLEMS, PAPER_SHIFTS, laplace_2d,
+                                 laplace_3d, paper_problem)
+
+
+def _matrix(name: str, scale: str):
+    if name == "laplace2d":
+        g = {"tiny": 16, "small": 64, "bench": 352}[scale]
+        return laplace_2d(g, g), "2-D 5-point Laplacian"
+    if name == "laplace3d":
+        g = {"tiny": 8, "small": 16, "bench": 46}[scale]
+        return laplace_3d(g, g, g, stencil=27), "3-D 27-point Laplacian"
+    return paper_problem(name, scale)
+
+
+def audit(name: str, method: str, scale: str, validate: str,
+          contracts: bool, backend: str, spmv_backend: str) -> list:
+    """Build + audit one (problem, method); returns printable findings."""
+    a, _ = _matrix(name, scale)
+    shift = PAPER_SHIFTS.get(name, 0.0)
+    spmv_format = "sell" if spmv_backend == "pallas" else "ell"
+    plan = build_plan(a, method=method, shift=shift, backend=backend,
+                      spmv_backend=spmv_backend, spmv_format=spmv_format,
+                      validate="off")
+    findings = [str(v) for v in validate_plan(plan, validate)]
+    findings += [str(v) for v in check_plan_kernels(plan)]
+    if contracts:
+        if plan.layout == "round_major":
+            pre = plan._precond
+            q = jnp.zeros((plan.slab_m,), dtype=plan.dtype)
+            findings += lint(pre, q, budget=ROUND_MAJOR_APPLY)
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static schedule race detector + kernel contract audit")
+    ap.add_argument("--problems",
+                    default=",".join(PAPER_PROBLEMS),
+                    help="comma-separated problem names (paper generators, "
+                         "laplace2d, laplace3d)")
+    ap.add_argument("--methods", default="hbmc,bmc,mc",
+                    help="comma-separated orderings (hbmc,bmc,mc,natural)")
+    ap.add_argument("--scale", default="tiny",
+                    choices=("tiny", "small", "bench"))
+    ap.add_argument("--validate", default="full", choices=("cheap", "full"))
+    ap.add_argument("--contracts", action="store_true",
+                    help="also lint the apply jaxpr primitive budget")
+    ap.add_argument("--backend", default="xla", choices=("xla", "pallas"))
+    ap.add_argument("--spmv-backend", default="xla",
+                    choices=("xla", "pallas"))
+    args = ap.parse_args(argv)
+    # plans are built in f64 by default; flip the flag before any tracing
+    jax.config.update("jax_enable_x64", True)
+
+    problems = [p for p in args.problems.split(",") if p]
+    methods = [m for m in args.methods.split(",") if m]
+    failures = 0
+    for name in problems:
+        for method in methods:
+            try:
+                findings = audit(name, method, args.scale, args.validate,
+                                 args.contracts, args.backend,
+                                 args.spmv_backend)
+            except Exception as e:  # a build failure is an audit failure
+                findings = [f"build failed: {type(e).__name__}: {e}"]
+            status = "ok" if not findings else "FAIL"
+            print(f"{name:16s} {method:8s} {args.validate:5s} {status}")
+            for f in findings:
+                print(f"    {f}")
+            failures += bool(findings)
+    if failures:
+        print(f"\n{failures} audit(s) failed", file=sys.stderr)
+        return 1
+    print(f"\nall {len(problems) * len(methods)} audits clean "
+          f"(validate={args.validate}, backend={args.backend})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

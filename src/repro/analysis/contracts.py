@@ -1,0 +1,174 @@
+"""Jaxpr contract linter: per-lowering-path primitive budgets.
+
+The repo's lowering paths each carry a structural contract that used to be
+asserted by copy-pasted jaxpr-walking helpers in three test files:
+
+  * the round-major apply performs ZERO scatters (its stores are dense
+    ``dynamic_update_slice`` — the layout contract of PR 2);
+  * a full-Pallas iteration has zero gather/scatter OUTSIDE ``pallas_call``
+    kernels (a kernel's internal VMEM gather is the point, not a leak);
+  * the distributed fused apply performs exactly ONE ``all_gather`` per
+    color round (the loop body traces once, so the jaxpr shows one);
+  * the preconditioned PCG iteration contains BOTH substitution sweeps
+    (the seed-era plain-CG pairing bug);
+  * ``refactor`` swaps operands with ZERO retraces.
+
+This module is that one API.  ``primitives``/``count_primitive`` are the
+walkers; :class:`PrimitiveBudget` + :func:`lint` evaluate a declarative
+budget against a callable's jaxpr and return human-readable findings
+(empty list = conforming); :func:`assert_budget` raises
+:class:`ContractError`.  The ``descend_pallas`` flag decides whether
+``pallas_call`` kernel bodies count against the budget — the round-major
+apply forbids scatter *everywhere* (descend), the full-Pallas iteration
+forbids gather only *outside* kernels (don't descend).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+
+import jax
+
+
+class ContractError(AssertionError):
+    """A jaxpr violated its lowering-path contract.  Carries ``findings``
+    (one string per violated budget line)."""
+
+    def __init__(self, findings: list[str], context: str = ""):
+        self.findings = list(findings)
+        prefix = f"{context}: " if context else ""
+        super().__init__(prefix + "; ".join(self.findings))
+
+
+def primitive_counts(fn, *args, descend_pallas: bool = True) -> Counter:
+    """Multiset of primitive names in ``fn``'s jaxpr, nested sub-jaxprs
+    included.  ``descend_pallas=False`` stops at ``pallas_call`` boundaries
+    so kernel-internal primitives don't count."""
+    out: Counter = Counter()
+
+    def walk(j):
+        for eqn in j.eqns:
+            out[eqn.primitive.name] += 1
+            if not descend_pallas and eqn.primitive.name == "pallas_call":
+                continue
+            for p in eqn.params.values():
+                for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                    if hasattr(sub, "jaxpr"):        # ClosedJaxpr
+                        walk(sub.jaxpr)
+                    elif hasattr(sub, "eqns"):       # raw Jaxpr
+                        walk(sub)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return out
+
+
+def primitives(fn, *args, descend_pallas: bool = True) -> set:
+    """Set of primitive names in ``fn``'s jaxpr (see ``primitive_counts``)."""
+    return set(primitive_counts(fn, *args, descend_pallas=descend_pallas))
+
+
+def count_primitive(fn, name: str, *args,
+                    descend_pallas: bool = True) -> int:
+    """Occurrences of one primitive in ``fn``'s jaxpr."""
+    return primitive_counts(fn, *args,
+                            descend_pallas=descend_pallas)[name]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrimitiveBudget:
+    """Declarative contract for one lowering path.
+
+    ``forbid_substrings``  no primitive name may contain any of these
+    ``require``            each of these primitives must appear >= once
+    ``exact``              ((name, count), ...): each must appear exactly
+                           ``count`` times
+    ``min_loops``          if set, ``scan`` + ``while`` occurrences must be
+                           >= this (the both-sweeps check)
+    ``descend_pallas``     whether kernel bodies count against the budget
+    """
+    name: str
+    forbid_substrings: tuple = ()
+    require: tuple = ()
+    exact: tuple = ()
+    min_loops: int | None = None
+    descend_pallas: bool = True
+
+
+def lint(fn, *args, budget: PrimitiveBudget) -> list[str]:
+    """Evaluate ``budget`` against ``fn``'s jaxpr; return findings."""
+    counts = primitive_counts(fn, *args,
+                              descend_pallas=budget.descend_pallas)
+    findings = []
+    for sub in budget.forbid_substrings:
+        hits = sorted(p for p in counts if sub in p)
+        if hits:
+            findings.append(f"[{budget.name}] forbidden primitive(s) "
+                            f"{hits} (matched {sub!r})")
+    for p in budget.require:
+        if counts[p] == 0:
+            findings.append(f"[{budget.name}] required primitive {p!r} "
+                            f"absent")
+    for p, want in budget.exact:
+        got = counts[p]
+        if got != want:
+            findings.append(f"[{budget.name}] expected exactly {want} "
+                            f"{p!r}, found {got}")
+    if budget.min_loops is not None:
+        loops = counts["scan"] + counts["while"]
+        if loops < budget.min_loops:
+            findings.append(f"[{budget.name}] expected >= "
+                            f"{budget.min_loops} loop primitives "
+                            f"(scan/while), found {loops}")
+    return findings
+
+
+def assert_budget(fn, *args, budget: PrimitiveBudget,
+                  context: str = "") -> None:
+    findings = lint(fn, *args, budget=budget)
+    if findings:
+        raise ContractError(findings, context=context)
+
+
+# ---------------------------------------------------------------------------
+# The repo's lowering-path contracts (the one place they are defined).
+# ---------------------------------------------------------------------------
+
+#: Round-major apply/SpMV: zero scatter anywhere — stores are dense
+#: dynamic_update_slice (kernel bodies included: the Pallas stores are
+#: dense contiguous slices too).
+ROUND_MAJOR_APPLY = PrimitiveBudget(
+    name="round-major-apply", forbid_substrings=("scatter",),
+    descend_pallas=True)
+
+#: Full-Pallas iteration: at least one kernel launch, zero gather/scatter
+#: OUTSIDE the kernels.
+FULL_PALLAS_ITERATION = PrimitiveBudget(
+    name="full-pallas-iteration", forbid_substrings=("gather", "scatter"),
+    require=("pallas_call",), descend_pallas=False)
+
+#: Pallas SpMV closure: a kernel launch, no gather outside it.
+PALLAS_SPMV = PrimitiveBudget(
+    name="pallas-spmv", forbid_substrings=("gather",),
+    require=("pallas_call",), descend_pallas=False)
+
+#: Distributed fused apply: exactly one all_gather in the jaxpr.  The fused
+#: sweep's fori_loop body traces ONCE, so one all_gather equation in the
+#: jaxpr IS one collective per executed color round.
+DISTRIBUTED_APPLY = PrimitiveBudget(
+    name="distributed-apply", exact=(("all_gather", 1),),
+    descend_pallas=True)
+
+#: Preconditioned PCG iteration: both substitution sweeps present.
+#: Static-trip-count fori_loops trace as `scan`; they lower to HLO whiles.
+PRECONDITIONED_ITERATION = PrimitiveBudget(
+    name="preconditioned-iteration", min_loops=2, descend_pallas=True)
+
+
+def retraces(plan, thunk) -> int:
+    """Run ``thunk`` and return how many PCG (re)traces it triggered on
+    ``plan`` — the zero-retrace refactor contract is
+    ``retraces(plan, lambda: plan.refactor(a2)) == 0`` followed by a
+    zero-retrace warm solve."""
+    before = plan._trace_count
+    thunk()
+    return plan._trace_count - before

@@ -1,0 +1,205 @@
+"""Static Pallas kernel checks for the hbmc_trisolve / sell_spmv families.
+
+The kernels (``repro.kernels``) assume a handful of static properties of
+their packed operands that, when violated, fail only at dispatch time (or
+worse, silently on TPU where an out-of-tile index wraps).  These checks
+prove them on the host before any ``pallas_call``:
+
+  * **shape/grid consistency** — the fused trisolve grid is ``(2S,)`` with
+    per-step BlockSpecs ``(1, R, K)`` over ``(2S, R, K)`` operands, the
+    SELL grid ``(ns/t,)`` with slice-tile BlockSpecs; block shapes must
+    divide the (padded) operand shapes exactly;
+  * **index-map bounds** — every gather index a kernel can read with a
+    nonzero value must land inside the VMEM-resident vector (the
+    ``fill_value=0`` guard is only correct when paired with zero values);
+  * **VMEM footprint** — the per-grid-step working set (blocked operands +
+    resident vectors, input/output-aliased buffers counted once) against a
+    per-core budget, with the estimate returned so callers can rescale.
+
+Checks return :class:`repro.analysis.schedule.Violation` lists (empty =
+clean) so the CLI prints one witness format for schedule and kernel
+findings alike.  VMEM size per the Pallas TPU guide: ~16 MiB/core.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .schedule import MAX_VIOLATIONS, ScheduleError, Violation
+
+#: Per-core VMEM budget (bytes).  TPU VMEM is ~16 MiB/core; the default
+#: leaves headroom for the compiler's own buffers.
+VMEM_BUDGET_BYTES = 14 * 2**20
+
+#: Mirrors kernels.config.DEFAULT_SLICE_TILE without importing jax.
+DEFAULT_SLICE_TILE = 256
+
+
+def trisolve_fused_vmem_bytes(s2: int, r: int, k: int, itemsize: int,
+                              batch: int = 1) -> int:
+    """Working set of one fused-trisolve grid step, in bytes.
+
+    Blocked per step: cols (1, R, K) int32 + vals (1, R, K) dtype +
+    dinv (1, R) dtype.  Resident across steps: q (S, R[, B]) dtype and the
+    in/out-aliased y (S*R[, B]) dtype (counted once — aliasing means one
+    buffer).
+    """
+    s = s2 // 2
+    per_step = r * k * (4 + itemsize) + r * itemsize
+    resident = s * r * batch * itemsize * 2          # q + aliased y
+    return per_step + resident
+
+
+def sell_spmv_vmem_bytes(t: int, k: int, w: int, n_pad: int, itemsize: int,
+                         batch: int = 1) -> int:
+    """Working set of one SELL SpMV grid step, in bytes: vals + cols tiles
+    (t, K, w), the resident x (n_pad[, B]) and the output tile
+    (t, w[, B])."""
+    tiles = t * k * w * (4 + itemsize)
+    resident = n_pad * batch * itemsize
+    out_tile = t * w * batch * itemsize
+    return tiles + resident + out_tile
+
+
+def check_trisolve_fused(cols, vals, dinv, batch: int = 1,
+                         vmem_budget: int = VMEM_BUDGET_BYTES,
+                         where: str = "kernel/hbmc_trisolve_fused"
+                         ) -> list[Violation]:
+    """Static checks for ``kernels.hbmc_trisolve.hbmc_trisolve_fused``
+    (and its batched variant) against packed fused tables."""
+    cols = np.asarray(cols)
+    vals = np.asarray(vals)
+    dinv = np.asarray(dinv)
+    out: list[Violation] = []
+    if cols.ndim != 3 or cols.shape != vals.shape:
+        out.append(Violation(
+            kind="shape-mismatch", where=where,
+            detail=f"cols {cols.shape} vs vals {vals.shape}; expected "
+                   f"matching (2S, R, K)"))
+        return out
+    s2, r_, k_ = cols.shape
+    if dinv.shape != (s2, r_):
+        out.append(Violation(
+            kind="shape-mismatch", where=where,
+            detail=f"dinv {dinv.shape} != {(s2, r_)}"))
+        return out
+    if s2 % 2:
+        # grid (2S,) with the fwd/bwd halves mirrored: odd step counts
+        # cannot split into two sweeps
+        out.append(Violation(
+            kind="grid-divisibility", where=where,
+            detail=f"fused step axis {s2} is odd; expected 2*S"))
+        return out
+    m = (s2 // 2) * r_
+    if not np.issubdtype(cols.dtype, np.integer):
+        out.append(Violation(
+            kind="index-dtype", where=where,
+            detail=f"cols dtype {cols.dtype} is not integral"))
+        return out
+    oob = (cols < 0) | (cols > m)
+    if oob.any():
+        g, t, k = (int(x) for x in np.argwhere(oob)[0])
+        out.append(Violation(
+            kind="index-bounds", where=where, round=g,
+            detail=f"cols[{g},{t},{k}] = {int(cols[g, t, k])} outside the "
+                   f"kernel's gather domain [0, {m}] (fill_value pad is "
+                   f"exactly {m})"))
+    live_oob = (cols == m) & (vals != 0)
+    if live_oob.any():
+        g, t, k = (int(x) for x in np.argwhere(live_oob)[0])
+        out.append(Violation(
+            kind="index-bounds", where=where, round=g,
+            detail=f"vals[{g},{t},{k}] != 0 on the fill_value pad "
+                   f"position — the guarded read would drop a real "
+                   f"contribution"))
+    need = trisolve_fused_vmem_bytes(s2, r_, k_, vals.dtype.itemsize,
+                                     batch=batch)
+    if need > vmem_budget:
+        out.append(Violation(
+            kind="vmem-budget", where=where,
+            detail=f"per-step working set ~{need / 2**20:.1f} MiB exceeds "
+                   f"the {vmem_budget / 2**20:.1f} MiB budget (S={s2 // 2}, "
+                   f"R={r_}, K={k_}, B={batch}); shard rounds across "
+                   f"devices or reduce the lane tile"))
+    return out[:MAX_VIOLATIONS]
+
+
+def check_sell_spmv(vals, cols, n_pad: int, batch: int = 1,
+                    slice_tile: int = DEFAULT_SLICE_TILE,
+                    vmem_budget: int = VMEM_BUDGET_BYTES,
+                    where: str = "kernel/sell_spmv") -> list[Violation]:
+    """Static checks for the ``kernels.sell_spmv`` family against a packed
+    SELL operand; ``n_pad`` is the length of the VMEM-resident x vector."""
+    vals = np.asarray(vals)
+    cols = np.asarray(cols)
+    out: list[Violation] = []
+    if vals.ndim != 3 or cols.shape != vals.shape:
+        out.append(Violation(
+            kind="shape-mismatch", where=where,
+            detail=f"cols {cols.shape} vs vals {vals.shape}; expected "
+                   f"matching (n_slices, K, w)"))
+        return out
+    n_slices, k_, w_ = vals.shape
+    if slice_tile < 1:
+        out.append(Violation(
+            kind="grid-divisibility", where=where,
+            detail=f"slice_tile {slice_tile} < 1"))
+        return out
+    if not np.issubdtype(cols.dtype, np.integer):
+        out.append(Violation(
+            kind="index-dtype", where=where,
+            detail=f"cols dtype {cols.dtype} is not integral"))
+        return out
+    # the kernel pads the slice axis to a multiple of t = min(tile, ns),
+    # so the grid always divides; what CAN go wrong is a live gather index
+    # outside the resident x (fill_value masks it to 0 — a dropped term)
+    t = min(slice_tile, n_slices)
+    live = vals != 0
+    bad = live & ((cols < 0) | (cols >= n_pad))
+    if bad.any():
+        s, k, w = (int(x) for x in np.argwhere(bad)[0])
+        out.append(Violation(
+            kind="index-bounds", where=where, round=s // max(t, 1),
+            detail=f"cols[{s},{k},{w}] = {int(cols[s, k, w])} with a "
+                   f"nonzero value, outside x's domain [0, {n_pad}) — the "
+                   f"fill_value guard would silently drop this term"))
+    need = sell_spmv_vmem_bytes(t, k_, w_, n_pad, vals.dtype.itemsize,
+                                batch=batch)
+    if need > vmem_budget:
+        out.append(Violation(
+            kind="vmem-budget", where=where,
+            detail=f"per-step working set ~{need / 2**20:.1f} MiB exceeds "
+                   f"the {vmem_budget / 2**20:.1f} MiB budget "
+                   f"(tile={t}, K={k_}, w={w_}, n_pad={n_pad}, B={batch}); "
+                   f"lower slice_tile or shard the slice axis"))
+    return out[:MAX_VIOLATIONS]
+
+
+def check_plan_kernels(plan, batch: int = 1,
+                       vmem_budget: int = VMEM_BUDGET_BYTES
+                       ) -> list[Violation]:
+    """Run the static kernel checks a plan's backend selection implies.
+
+    ``backend="pallas"`` (round-major) routes the preconditioner through
+    ``hbmc_trisolve_fused``; ``spmv_backend="pallas"`` routes the SpMV
+    through ``sell_spmv``.  XLA-only plans return ``[]`` — their lowering
+    has no static kernel contract to break.
+    """
+    out: list[Violation] = []
+    if plan.backend == "pallas" and plan.layout == "round_major":
+        t = plan._precond.tables
+        out += check_trisolve_fused(t.cols, t.vals, t.dinv, batch=batch,
+                                    vmem_budget=vmem_budget)
+    if plan.spmv_backend == "pallas":
+        out += check_sell_spmv(plan._spmv_vals, plan._spmv_cols,
+                               n_pad=int(plan.slab_m), batch=batch,
+                               vmem_budget=vmem_budget)
+    return out
+
+
+def assert_plan_kernels(plan, batch: int = 1,
+                        vmem_budget: int = VMEM_BUDGET_BYTES,
+                        context: str = "") -> None:
+    violations = check_plan_kernels(plan, batch=batch,
+                                    vmem_budget=vmem_budget)
+    if violations:
+        raise ScheduleError(violations, context=context)

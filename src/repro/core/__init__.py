@@ -15,7 +15,8 @@ from .iccg import (BREAKDOWN, CONVERGED, DIVERGED, DIVERGENCE_FACTOR,
                    spmv_sell, spmv_sell_batched, status_name)
 from .matrices import PAPER_PROBLEMS, PAPER_SHIFTS, paper_problem
 from .plan import ON_BREAKDOWN, SetupBreakdown, SolverPlan, build_plan
-from .sell import (FusedRoundMajorTables, RoundMajorLayout, RoundMajorTables,
+from .sell import (FusedRoundMajorTables, PackingIndexError, RoundMajorLayout,
+                   RoundMajorTables,
                    SellMatrix, StepTables, fuse_round_major, pack_ell,
                    pack_factor, pack_factor_hbmc, pack_sell, pack_steps,
                    permute_round_major, round_major_layout, rounds_bmc,

@@ -121,7 +121,6 @@ def verify_level2_structure(a_bar: sp.csr_matrix, ordering: HBMCOrdering) -> boo
     Equivalently: unknowns occupying the same round l of the same level-1
     block (a contiguous run of w final indices) are mutually independent.
     """
-    n = ordering.n_final
     w = ordering.w
     coo = sp.coo_matrix(a_bar)
     r, c = coo.row, coo.col

@@ -40,7 +40,7 @@ from .coloring import block_multicolor_ordering, multicolor_ordering, pad_system
 from .graph import permute_system
 from .hbmc import hbmc_from_bmc, pad_system_hbmc
 from .ic0 import FactorBreakdownError, ic0_refactor, ic0_structure
-from .iccg import (DIVERGENCE_FACTOR, STAGNATION_WINDOW, STATUS_NAMES,
+from .iccg import (DIVERGENCE_FACTOR, STAGNATION_WINDOW,
                    BatchedPCGResult, PCGResult, SlabState,
                    _pcg_batched_device, _pcg_device, _pcg_slab_device,
                    make_sharded_spmv, spmv_ell, spmv_ell_batched, spmv_sell,
@@ -250,7 +250,14 @@ class SolverPlan:
                  backend: str = "xla", interpret: bool | None = None,
                  layout: str = "round_major", mesh: Mesh | None = None,
                  mesh_axis: str = "data", lane_multiple: int = 1,
-                 spmv_backend: str = "xla", on_breakdown: str = "clamp"):
+                 spmv_backend: str = "xla", on_breakdown: str = "clamp",
+                 validate: str = "off"):
+        # deferred: repro.analysis is jax-free but imports nothing from
+        # core.plan, so this only guards against future cycles
+        from repro.analysis.schedule import VALIDATE_MODES
+        if validate not in VALIDATE_MODES:
+            raise ValueError(f"unknown validate mode {validate!r}; "
+                             f"expected one of {VALIDATE_MODES}")
         if on_breakdown not in ON_BREAKDOWN:
             raise ValueError(f"unknown on_breakdown {on_breakdown!r}; "
                              f"expected one of {ON_BREAKDOWN}")
@@ -289,6 +296,7 @@ class SolverPlan:
         self.w = w
         self.shift = shift
         self.on_breakdown = on_breakdown
+        self.validate = validate
         # factor-health record, refreshed by every _factor pass
         self.effective_shift = shift
         self.clamped_pivots = 0
@@ -323,6 +331,14 @@ class SolverPlan:
         l_bar = self._factor(self._sysd.a_bar)
         t2 = time.perf_counter()
         self._build_operators(l_bar)
+        if validate != "off":
+            # static race proof BEFORE the plan is handed out: "cheap" is
+            # the O(nnz) round-monotonicity scan, "full" additionally
+            # proves the materialized trisolve tables and the IC(0) step
+            # schedule (raises ScheduleError with the offending witness)
+            from repro.analysis.schedule import assert_plan_valid
+            assert_plan_valid(self, validate,
+                              context=f"build_plan(method={method!r})")
         t3 = time.perf_counter()
         self.timings = SetupBreakdown(ordering=t1 - t0, factor=t2 - t1,
                                       pack=t3 - t2, total=t3 - t0)
@@ -900,7 +916,8 @@ def build_plan(a: sp.spmatrix, method: str = "hbmc", block_size: int = 32,
                mesh_axis: str = "data",
                lane_multiple: int = 1,
                spmv_backend: str = "xla",
-               on_breakdown: str = "clamp") -> SolverPlan:
+               on_breakdown: str = "clamp",
+               validate: str = "off") -> SolverPlan:
     """One-time setup: ordering -> round-parallel IC(0) -> packed operators.
 
     Returns a ``SolverPlan`` whose ``solve`` / ``solve_batched`` /
@@ -918,13 +935,22 @@ def build_plan(a: sp.spmatrix, method: str = "hbmc", block_size: int = 32,
     ``spmv_format="sell"``) independently picks the SpMV one — with both
     set to ``"pallas"`` the entire PCG iteration runs through Pallas
     kernels on one VMEM-resident round-major state.
+
+    ``validate`` runs the static schedule race detector
+    (``repro.analysis``) at setup: ``"cheap"`` is an O(nnz)
+    round-monotonicity scan of the ordering's rounds, ``"full"``
+    additionally proves the materialized trisolve tables and the IC(0)
+    step schedule dependency-ordered.  A violation raises
+    ``repro.analysis.ScheduleError`` carrying the offending row pair /
+    edge / round; ``"off"`` (default) skips the proof.
     """
     return SolverPlan(a, method=method, block_size=block_size, w=w,
                       shift=shift, spmv_format=spmv_format, dtype=dtype,
                       backend=backend, interpret=interpret, layout=layout,
                       mesh=mesh, mesh_axis=mesh_axis,
                       lane_multiple=lane_multiple,
-                      spmv_backend=spmv_backend, on_breakdown=on_breakdown)
+                      spmv_backend=spmv_backend, on_breakdown=on_breakdown,
+                      validate=validate)
 
 
 # ---------------------------------------------------------------------------

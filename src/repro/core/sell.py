@@ -29,6 +29,32 @@ from .graph import ragged_arange
 from .hbmc import HBMCOrdering
 
 
+class PackingIndexError(ValueError):
+    """A pack input carries an out-of-range index (corrupted CSR indices
+    or a round referencing a nonexistent row).  Raised on the host before
+    any buffer is written — a bad index that reached a packed table would
+    otherwise surface only as a wrong answer or a device-side wrap."""
+
+
+def _check_csr_indices(a: sp.csr_matrix, n_cols: int, what: str) -> None:
+    idx = a.indices
+    if idx.size and (int(idx.min()) < 0 or int(idx.max()) >= n_cols):
+        bad = idx[(idx < 0) | (idx >= n_cols)][0]
+        raise PackingIndexError(
+            f"{what}: CSR column index {int(bad)} outside [0, {n_cols}) — "
+            f"corrupted indices cannot be packed")
+
+
+def _check_round_rows(rounds: list[np.ndarray], n: int, what: str) -> None:
+    for s, r in enumerate(rounds):
+        r = np.asarray(r)
+        if r.size and (int(r.min()) < 0 or int(r.max()) >= n):
+            bad = r[(r < 0) | (r >= n)][0]
+            raise PackingIndexError(
+                f"{what}: round {s} references row {int(bad)} outside "
+                f"[0, {n})")
+
+
 @dataclasses.dataclass
 class StepTables:
     """Host-side packed tables; converted to jnp on first use."""
@@ -123,6 +149,8 @@ def pack_steps(tri: sp.csr_matrix, diag: np.ndarray,
     tri = sp.csr_matrix(tri)
     tri.sort_indices()
     n = tri.shape[0]
+    _check_csr_indices(tri, n, "pack_steps")
+    _check_round_rows(rounds, n, "pack_steps")
     n_slots = n + 1
     if drop_mask is not None:
         rounds = [r[~drop_mask[r]] for r in rounds]
@@ -399,6 +427,7 @@ def pack_sell(a: sp.spmatrix, w: int) -> SellMatrix:
     a = sp.csr_matrix(a)
     a.sort_indices()
     n = a.shape[0]
+    _check_csr_indices(a, a.shape[1], "pack_sell")
     n_pad = ((n + w - 1) // w) * w
     nnz_per_row = np.zeros(n_pad, dtype=np.int64)
     nnz_per_row[:n] = np.diff(a.indptr)
@@ -420,6 +449,7 @@ def pack_ell(a: sp.spmatrix) -> tuple[np.ndarray, np.ndarray]:
     a = sp.csr_matrix(a)
     a.sort_indices()
     n = a.shape[0]
+    _check_csr_indices(a, a.shape[1], "pack_ell")
     k = int(np.diff(a.indptr).max(initial=0))
     k = max(k, 1)
     cols = np.zeros((n, k), dtype=np.int32)

@@ -11,7 +11,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import sell
 from repro.core.sell import StepTables

@@ -26,7 +26,6 @@ from repro.configs import ARCH_IDS, SHAPES, cells, get_config
 from repro.launch import input_specs as ispec
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import roofline_terms
-from repro.models.config import ArchConfig
 from repro.serve.step import serve_step
 from repro.train.optimizer import AdamWConfig
 from repro.train.step import train_step

@@ -21,7 +21,6 @@ dots for every cell we lower.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from collections import defaultdict
 

@@ -9,7 +9,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import SHAPES, get_config
 from repro.dist.sharding import (batch_partition_spec, cache_partition_spec,
                                  params_shardings)
 from repro.models import init_cache, param_specs

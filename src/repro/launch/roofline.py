@@ -70,7 +70,6 @@ class CollectiveStats:
 def parse_collectives(hlo_text: str) -> CollectiveStats:
     bytes_by: dict = {k: 0 for k in _COLLECTIVES}
     count_by: dict = {k: 0 for k in _COLLECTIVES}
-    seen_done = set()
     for m in _OP_RE.finditer(hlo_text):
         type_str, kind = m.group(1), m.group(2)
         # async pairs appear as -start/-done; count the op once (at -start);

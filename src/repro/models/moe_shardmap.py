@@ -20,7 +20,6 @@ C_local = C / data_shards (routing is batch-local in both).
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +28,6 @@ from jax.experimental.shard_map import shard_map
 
 from repro.dist.constraints import _current_mesh
 
-from .layers import mlp_apply
 
 
 def _local_moe(xf, router, gate_w, up_w, down_w, *, top_k, capacity_factor,

@@ -10,10 +10,6 @@ Caches (decode) are pytrees stacked the same way, scanned as xs/ys.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
 

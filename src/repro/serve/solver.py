@@ -187,14 +187,27 @@ class PlanCache:
     key while a slab group holds resident columns, via ``get(pin=True)``);
     pinned entries are never evicted and never refactored out from under
     their slabs.
+
+    ``validate`` gates cache admission: on a miss the freshly built plan
+    is run through the static schedule race detector
+    (``repro.analysis.assert_plan_valid``) at that depth before it is
+    cached or returned — a plan with a provable schedule race raises
+    ``ScheduleError`` and never enters the cache, so no later hit can
+    dispatch it.  ``"off"`` (default) admits unconditionally.
     """
 
     def __init__(self, capacity: int = 8,
-                 build: Callable[..., SolverPlan] = build_plan):
+                 build: Callable[..., SolverPlan] = build_plan,
+                 validate: str = "off"):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        from repro.analysis.schedule import VALIDATE_MODES
+        if validate not in VALIDATE_MODES:
+            raise ValueError(f"validate must be one of {VALIDATE_MODES}, "
+                             f"got {validate!r}")
         self.capacity = capacity
         self._build = build
+        self.validate = validate
         self._entries: OrderedDict[PlanKey, _CacheEntry] = OrderedDict()
         self.stats = CacheStats()
 
@@ -237,6 +250,13 @@ class PlanCache:
             self.stats.refactors += 1
             return entry.plan, "refactor"
         plan = self._build(a, **knobs)
+        if self.validate != "off":
+            # admission control: prove the schedule race-free before the
+            # plan can be cached (and re-served on every later hit)
+            from repro.analysis.schedule import assert_plan_valid
+            assert_plan_valid(plan, self.validate,
+                              context=f"PlanCache admission "
+                                      f"{key.pattern[:12]}")
         self._entries[key] = _CacheEntry(plan=plan, values_fp=vfp,
                                          pins=int(pin))
         self.stats.misses += 1

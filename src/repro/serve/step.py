@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models import forward, init_cache
+from repro.models import forward
 from repro.models.config import ArchConfig
 
 

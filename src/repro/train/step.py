@@ -13,10 +13,6 @@ without touching the math (needed for llama3-405b train_4k).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -13,6 +13,7 @@ import numpy as np
 import pytest
 import scipy.sparse as sp
 
+from repro.analysis import PRECONDITIONED_ITERATION, lint
 from repro.core import (build_plan, ic0, pcg, pcg_iteration, solve_iccg,
                         spmv_ell, spmv_sell)
 from repro.core import sell
@@ -21,10 +22,8 @@ from repro.core.hbmc import hbmc_from_bmc, pad_system_hbmc
 from repro.core.iccg import make_sharded_spmv
 from repro.core.matrices import laplace_2d
 from repro.core.plan import _order_system
-from repro.core.trisolve import (DeviceTables, backward_solve,
-                                 DistributedRoundMajorPreconditioner,
-                                 forward_solve, fused_solve,
-                                 shard_fused_tables)
+from repro.core.trisolve import (DistributedRoundMajorPreconditioner,
+                                 fused_solve, shard_fused_tables)
 
 
 def _mesh1():
@@ -180,26 +179,6 @@ def test_pcg_iteration_reproduces_pcg_iterates():
     assert not np.allclose(np.asarray(xw), ref.x, atol=1e-10)
 
 
-def _count_primitive(fn, name, *args):
-    """Occurrences of a primitive in fn's jaxpr, nested sub-jaxprs included."""
-    count = 0
-
-    def walk(j):
-        nonlocal count
-        for eqn in j.eqns:
-            if eqn.primitive.name == name:
-                count += 1
-            for p in eqn.params.values():
-                for sub in (p if isinstance(p, (list, tuple)) else [p]):
-                    if hasattr(sub, "jaxpr"):        # ClosedJaxpr
-                        walk(sub.jaxpr)
-                    elif hasattr(sub, "eqns"):       # raw Jaxpr
-                        walk(sub)
-
-    walk(jax.make_jaxpr(fn)(*args).jaxpr)
-    return count
-
-
 def test_pcg_iteration_jaxpr_contains_both_sweeps():
     """The lowered iteration must contain the fwd AND bwd substitution
     loops — the seed-era (r, r) pairings never called the preconditioner,
@@ -208,10 +187,8 @@ def test_pcg_iteration_jaxpr_contains_both_sweeps():
     sysd, spmv, pre = _index_operators(a)
     step = pcg_iteration(spmv, pre)
     v = jnp.zeros((sysd.n_padded,))
-    # static-trip-count fori_loops trace as `scan`; they lower to HLO whiles
-    n_loops = (_count_primitive(step, "scan", v, v, v, jnp.asarray(1.0))
-               + _count_primitive(step, "while", v, v, v, jnp.asarray(1.0)))
-    assert n_loops >= 2, f"expected fwd+bwd sweeps, found {n_loops} loops"
+    assert lint(step, v, v, v, jnp.asarray(1.0),
+                budget=PRECONDITIONED_ITERATION) == []
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,6 @@
 """End-to-end ICCG equivalence and correctness (paper Table 5.2 / Fig 5.1)."""
 import numpy as np
 import pytest
-import scipy.sparse as sp
 import scipy.sparse.linalg as spla
 
 from repro.core import solve_iccg

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.models import forward, init_cache, init_params
+from repro.models import forward, init_params
 from repro.train.optimizer import AdamWConfig, init_opt_state
 from repro.train.step import train_step
 

@@ -5,7 +5,6 @@ Covers: distributed ICCG (solver sharded over a mesh) iterating identically
 to single-device; pjit train_step on a 2x2 mesh matching the unsharded
 step; shard_map MoE gradients matching the plain path.
 """
-import json
 import os
 import subprocess
 import sys

@@ -26,6 +26,7 @@ try:
 except ImportError:   # fallback engine: property sweeps still RUN without it
     from _hypothesis_stub import given, settings, st
 
+from repro.analysis import check_reversed_rounds, check_rounds
 from repro.core import fuse_round_major, pack_factor
 from repro.core.ic0 import ic0
 from repro.core.matrices import graph_laplacian, laplace_2d
@@ -133,3 +134,20 @@ def test_round_major_layout_roundtrips_bitwise(kind, size, seed, bs, w, nb):
     flat = lay.rows.reshape(-1)
     holes = flat == lay.n_slots - 1
     assert not np.asarray(rm[holes]).any()
+
+
+@settings(max_examples=15, deadline=None)
+@given(kind=st.sampled_from(["graph", "lap2d"]), size=st.integers(0, 8),
+       seed=st.integers(0, 10_000), bs=st.sampled_from([2, 4, 8]),
+       w=st.sampled_from([2, 3, 4]))
+def test_round_schedules_prove_race_free(kind, size, seed, bs, w):
+    """The static race detector (repro.analysis) proves every ordering's
+    round schedule: all dependency edges cross strictly forward, and the
+    backward schedule is the reversed forward one."""
+    a = _random_instance(kind, size, seed)
+    for method in METHODS:
+        sysd = _order_system(sp.csr_matrix(a), None, method, bs, w)
+        assert check_rounds(sysd.a_bar, sysd.fwd_rounds,
+                            drop_mask=sysd.drop) == [], method
+        assert check_reversed_rounds(sysd.fwd_rounds,
+                                     sysd.bwd_rounds) == [], method

@@ -15,10 +15,11 @@ import numpy as np
 import pytest
 import scipy.sparse as sp
 
+from repro.analysis import ROUND_MAJOR_APPLY, lint, primitives
 from repro.core import (build_preconditioner_from_rounds,
                         build_round_major_preconditioner_from_rounds,
                         fuse_round_major, ic0, pack_ell, pack_factor,
-                        permute_round_major, round_major_layout, solve_iccg,
+                        permute_round_major, solve_iccg,
                         solve_iccg_batched, spmv_ell)
 from repro.core.ic0 import sequential_ic_solve
 from repro.core.matrices import laplace_2d
@@ -161,24 +162,6 @@ def test_unknown_layout_rejected():
 # 3. Zero full-vector permutations in the hot loop.
 # ---------------------------------------------------------------------------
 
-def _primitives(fn, *args):
-    """All primitive names in fn's jaxpr, including nested sub-jaxprs."""
-    out = set()
-
-    def walk(j):
-        for eqn in j.eqns:
-            out.add(eqn.primitive.name)
-            for p in eqn.params.values():
-                for sub in (p if isinstance(p, (list, tuple)) else [p]):
-                    if hasattr(sub, "jaxpr"):        # ClosedJaxpr
-                        walk(sub.jaxpr)
-                    elif hasattr(sub, "eqns"):       # raw Jaxpr
-                        walk(sub)
-
-    walk(jax.make_jaxpr(fn)(*args).jaxpr)
-    return out
-
-
 def test_native_apply_has_no_scatter():
     """Layout contract, enforced on the jaxpr: the index-space apply
     scatters (y.at[rows].set per round, plus the solution scatter-back);
@@ -190,14 +173,13 @@ def test_native_apply_has_no_scatter():
         l_bar, sysd.fwd_rounds, sysd.bwd_rounds, drop_mask=sysd.drop)
     r_rm = jnp.zeros((lay.m,))
     r_ix = jnp.zeros((sysd.n_padded,))
-    prims_rm = _primitives(pre_rm, r_rm)
-    prims_ix = _primitives(pre_ix, r_ix)
-    assert not any("scatter" in p for p in prims_rm), prims_rm
+    assert lint(pre_rm, r_rm, budget=ROUND_MAJOR_APPLY) == []
+    prims_ix = primitives(pre_ix, r_ix)
     assert any("scatter" in p for p in prims_ix)
-    assert "dynamic_update_slice" in prims_rm
+    assert "dynamic_update_slice" in primitives(pre_rm, r_rm)
     # batched applies obey the same contract
-    prims_rm_b = _primitives(pre_rm.apply_batched, jnp.zeros((lay.m, 3)))
-    assert not any("scatter" in p for p in prims_rm_b)
+    assert lint(pre_rm.apply_batched, jnp.zeros((lay.m, 3)),
+                budget=ROUND_MAJOR_APPLY) == []
 
 
 def test_native_spmv_has_no_scatter():
@@ -207,9 +189,8 @@ def test_native_spmv_has_no_scatter():
     a_rm = permute_round_major(sysd.a_bar, lay)
     cols_h, vals_h = pack_ell(a_rm)
     vals, cols = jnp.asarray(vals_h), jnp.asarray(cols_h)
-    prims = _primitives(lambda x: spmv_ell(vals, cols, x),
-                        jnp.zeros((lay.m,)))
-    assert not any("scatter" in p for p in prims), prims
+    assert lint(lambda x: spmv_ell(vals, cols, x), jnp.zeros((lay.m,)),
+                budget=ROUND_MAJOR_APPLY) == []
 
 
 # ---------------------------------------------------------------------------

@@ -30,7 +30,6 @@ Pins the tentpole claims of the serving layer (repro/serve/solver.py):
      slabs, and reject float dtype mismatches instead of silently
      casting (regression tests for the satellite bugfix).
 """
-import jax.numpy as jnp
 import numpy as np
 import pytest
 import scipy.sparse as sp

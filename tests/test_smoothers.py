@@ -2,7 +2,6 @@
 paper's eq. 3.4 notion, for the GS case)."""
 import numpy as np
 import pytest
-import scipy.sparse as sp
 
 from repro.core import (block_multicolor_ordering, hbmc_from_bmc, pad_system,
                         pad_system_hbmc)

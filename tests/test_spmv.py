@@ -16,8 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-import scipy.sparse as sp
 
+from repro.analysis import (FULL_PALLAS_ITERATION, PALLAS_SPMV, lint,
+                            primitives)
 from repro.core import build_plan, make_sharded_spmv, pcg_iteration, solve_iccg
 from repro.core.iccg import spmv_sell, spmv_sell_batched
 from repro.core.matrices import graph_laplacian, laplace_2d
@@ -181,27 +182,6 @@ def test_sharded_spmv_kernel_matches_xla_bitwise():
 # 3. Jaxpr: the pallas plan's iteration has no gather-based SpMV.
 # ---------------------------------------------------------------------------
 
-def _primitives(fn, *args):
-    """Primitive names in fn's jaxpr, NOT descending into pallas_call
-    bodies (a kernel's internal VMEM gather is the point, not a leak)."""
-    out = set()
-
-    def walk(j):
-        for eqn in j.eqns:
-            out.add(eqn.primitive.name)
-            if eqn.primitive.name == "pallas_call":
-                continue
-            for p in eqn.params.values():
-                for sub in (p if isinstance(p, (list, tuple)) else [p]):
-                    if hasattr(sub, "jaxpr"):        # ClosedJaxpr
-                        walk(sub.jaxpr)
-                    elif hasattr(sub, "eqns"):       # raw Jaxpr
-                        walk(sub)
-
-    walk(jax.make_jaxpr(fn)(*args).jaxpr)
-    return out
-
-
 def test_pallas_spmv_closure_has_no_gather():
     a = laplace_2d(10, 8)
     sm = pack_sell(a, 4)
@@ -210,10 +190,8 @@ def test_pallas_spmv_closure_has_no_gather():
     spmv_p = _make_spmv("sell", n, vals, cols, batched=False,
                         spmv_backend="pallas", interpret=True)
     spmv_x = _make_spmv("sell", n, vals, cols, batched=False)
-    prims_p = _primitives(spmv_p, jnp.zeros((n,)))
-    prims_x = _primitives(spmv_x, jnp.zeros((n,)))
-    assert "pallas_call" in prims_p
-    assert not any("gather" in p for p in prims_p), prims_p
+    assert lint(spmv_p, jnp.zeros((n,)), budget=PALLAS_SPMV) == []
+    prims_x = primitives(spmv_x, jnp.zeros((n,)), descend_pallas=False)
     assert any("gather" in p for p in prims_x)
 
 
@@ -231,10 +209,8 @@ def test_full_pallas_iteration_has_no_gather():
     step = pcg_iteration(spmv, plan._precond)
     m = plan._precond.m
     z = jnp.zeros((m,))
-    prims = _primitives(step, z, z, z, jnp.asarray(1.0))
-    assert "pallas_call" in prims
-    assert not any("gather" in p for p in prims), prims
-    assert not any("scatter" in p for p in prims), prims
+    assert lint(step, z, z, z, jnp.asarray(1.0),
+                budget=FULL_PALLAS_ITERATION) == []
 
 
 # ---------------------------------------------------------------------------

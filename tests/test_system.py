@@ -1,7 +1,5 @@
 """End-to-end behaviour tests: the paper's solver pipeline and the LM
 training/serving pipeline, exercised through their public entry points."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import solve_iccg

@@ -1,9 +1,7 @@
 """Triangular-solver layers: IC(0), step packing, jnp + Pallas paths."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-import scipy.sparse as sp
 
 from repro.core import (block_multicolor_ordering, build_preconditioner,
                         hbmc_from_bmc, ic0, ic0_error, pack_factor_hbmc,
