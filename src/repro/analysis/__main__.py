@@ -4,33 +4,49 @@
         [--problems thermal2,parabolic_fem,...]   (default: all paper five)
         [--methods hbmc,bmc,mc]                   (default: hbmc,bmc,mc)
         [--scale tiny|small|bench]                (default: tiny)
-        [--validate cheap|full]                   (default: full)
+        [--validate cheap|full|deep]              (default: full)
         [--contracts]        also lint the apply/SpMV jaxprs
+        [--dtype-flow]       lint dtype propagation on every lowering path
+        [--collectives]      prove the collective structure of the plan's
+                             optimized HLO (mesh over all devices when >1)
+        [--traffic]          cross-check the static traffic model against
+                             HLO-measured bytes  [--traffic-tol 0.10]
+        [--witness-json PATH]  dump machine-readable witnesses on failure
         [--backend xla|pallas] [--spmv-backend xla|pallas]
 
-For every (problem, method) pair this builds a plan, runs the schedule
-race detector at the requested depth, the static kernel checks the
-backend selection implies, and (with ``--contracts``) the jaxpr budget of
-the round-major apply.  Prints one line per audit; on failure prints every
-witness and exits 1.  ``laplace2d`` / ``laplace3d`` are accepted as extra
-problem names alongside the paper generators.
+    PYTHONPATH=src python -m repro.analysis bench-gate
+        [--baseline-dir benchmarks] [--candidate RUN.json ...]
+        [--tolerance 0.5] [--smoke] [--witness-json PATH]
+
+For every (problem, method) pair the audit builds a plan, runs the
+schedule race detector at the requested depth, the static kernel checks
+the backend selection implies, and any of the opt-in linters above.
+Prints one line per audit; on failure prints every witness and exits 1.
+``laplace2d`` / ``laplace3d`` are accepted as extra problem names
+alongside the paper generators.
+
+``bench-gate`` compares fresh bench runs (``--candidate``) against the
+committed ``BENCH_*.json`` snapshots, matching files by their ``schema``
+field; ``--smoke`` gates every committed snapshot against itself to
+prove the gate covers each schema.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import glob
+import json
+import os
 import sys
 
-import jax
-import jax.numpy as jnp
-
-from repro.analysis import (ROUND_MAJOR_APPLY, check_plan_kernels, lint,
+from repro.analysis import (ROUND_MAJOR_APPLY, Violation, bench_gate,
+                            check_plan_collectives, check_plan_dtype_flow,
+                            check_plan_kernels, check_plan_traffic, lint,
                             validate_plan)
-from repro.core import build_plan
-from repro.core.matrices import (PAPER_PROBLEMS, PAPER_SHIFTS, laplace_2d,
-                                 laplace_3d, paper_problem)
 
 
 def _matrix(name: str, scale: str):
+    from repro.core.matrices import laplace_2d, laplace_3d, paper_problem
     if name == "laplace2d":
         g = {"tiny": 16, "small": 64, "bench": 352}[scale]
         return laplace_2d(g, g), "2-D 5-point Laplacian"
@@ -41,25 +57,69 @@ def _matrix(name: str, scale: str):
 
 
 def audit(name: str, method: str, scale: str, validate: str,
-          contracts: bool, backend: str, spmv_backend: str) -> list:
-    """Build + audit one (problem, method); returns printable findings."""
+          contracts: bool, backend: str, spmv_backend: str,
+          dtype_flow: bool = False, collectives: bool = False,
+          traffic: bool = False, traffic_tol: float = 0.10) -> list:
+    """Build + audit one (problem, method); returns findings.
+
+    Findings are :class:`Violation` instances where a linter produced a
+    witness, plain strings otherwise (jaxpr budget lint, build errors).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import build_plan
+    from repro.core.matrices import PAPER_SHIFTS
+
     a, _ = _matrix(name, scale)
     shift = PAPER_SHIFTS.get(name, 0.0)
     spmv_format = "sell" if spmv_backend == "pallas" else "ell"
     plan = build_plan(a, method=method, shift=shift, backend=backend,
                       spmv_backend=spmv_backend, spmv_format=spmv_format,
                       validate="off")
-    findings = [str(v) for v in validate_plan(plan, validate)]
-    findings += [str(v) for v in check_plan_kernels(plan)]
+    findings: list = list(validate_plan(plan, validate))
+    findings += check_plan_kernels(plan)
     if contracts:
         if plan.layout == "round_major":
             pre = plan._precond
             q = jnp.zeros((plan.slab_m,), dtype=plan.dtype)
             findings += lint(pre, q, budget=ROUND_MAJOR_APPLY)
+    if dtype_flow:
+        findings += check_plan_dtype_flow(plan)
+    if traffic:
+        try:
+            findings += check_plan_traffic(plan, tolerance=traffic_tol)
+        except ValueError as e:   # non-round_major layouts have no model
+            findings.append(f"traffic model unavailable: {e}")
+    if collectives:
+        devs = jax.devices()
+        if len(devs) > 1:
+            from jax.sharding import Mesh
+            mesh = Mesh(np.array(devs), ("dev",))
+            mplan = build_plan(a, method=method, shift=shift,
+                               backend="xla", spmv_backend="xla",
+                               mesh=mesh, mesh_axis="dev", validate="off")
+            findings += check_plan_collectives(mplan)
+        else:
+            # single device: still prove the local paths stay collective-free
+            findings += check_plan_collectives(plan)
     return findings
 
 
-def main(argv: list[str] | None = None) -> int:
+def _witness_dicts(findings: list) -> list[dict]:
+    return [dataclasses.asdict(f) if isinstance(f, Violation)
+            else {"detail": str(f)} for f in findings]
+
+
+def _write_witnesses(path: str | None, witnesses: list[dict]) -> None:
+    if path:
+        with open(path, "w") as fh:
+            json.dump(witnesses, fh, indent=2)
+
+
+def audit_main(argv: list[str] | None = None) -> int:
+    from repro.core.matrices import PAPER_PROBLEMS
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="static schedule race detector + kernel contract audit")
@@ -71,38 +131,134 @@ def main(argv: list[str] | None = None) -> int:
                     help="comma-separated orderings (hbmc,bmc,mc,natural)")
     ap.add_argument("--scale", default="tiny",
                     choices=("tiny", "small", "bench"))
-    ap.add_argument("--validate", default="full", choices=("cheap", "full"))
+    ap.add_argument("--validate", default="full",
+                    choices=("cheap", "full", "deep"))
     ap.add_argument("--contracts", action="store_true",
                     help="also lint the apply jaxpr primitive budget")
+    ap.add_argument("--dtype-flow", action="store_true",
+                    help="lint dtype propagation on every lowering path")
+    ap.add_argument("--collectives", action="store_true",
+                    help="prove the optimized-HLO collective structure "
+                         "(builds a mesh plan over all devices when >1)")
+    ap.add_argument("--traffic", action="store_true",
+                    help="cross-check the static traffic model against "
+                         "HLO-measured bytes")
+    ap.add_argument("--traffic-tol", type=float, default=0.10,
+                    help="relative tolerance for --traffic (default 0.10)")
+    ap.add_argument("--witness-json", default=None, metavar="PATH",
+                    help="dump machine-readable witnesses to PATH")
     ap.add_argument("--backend", default="xla", choices=("xla", "pallas"))
     ap.add_argument("--spmv-backend", default="xla",
                     choices=("xla", "pallas"))
     args = ap.parse_args(argv)
     # plans are built in f64 by default; flip the flag before any tracing
+    import jax
     jax.config.update("jax_enable_x64", True)
 
     problems = [p for p in args.problems.split(",") if p]
     methods = [m for m in args.methods.split(",") if m]
     failures = 0
+    witnesses: list[dict] = []
     for name in problems:
         for method in methods:
             try:
                 findings = audit(name, method, args.scale, args.validate,
                                  args.contracts, args.backend,
-                                 args.spmv_backend)
+                                 args.spmv_backend,
+                                 dtype_flow=args.dtype_flow,
+                                 collectives=args.collectives,
+                                 traffic=args.traffic,
+                                 traffic_tol=args.traffic_tol)
             except Exception as e:  # a build failure is an audit failure
                 findings = [f"build failed: {type(e).__name__}: {e}"]
             status = "ok" if not findings else "FAIL"
             print(f"{name:16s} {method:8s} {args.validate:5s} {status}")
             for f in findings:
                 print(f"    {f}")
+            witnesses += _witness_dicts(findings)
             failures += bool(findings)
     if failures:
+        _write_witnesses(args.witness_json, witnesses)
         print(f"\n{failures} audit(s) failed", file=sys.stderr)
         return 1
     print(f"\nall {len(problems) * len(methods)} audits clean "
           f"(validate={args.validate}, backend={args.backend})")
     return 0
+
+
+def bench_gate_main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis bench-gate",
+        description="gate bench runs against committed BENCH_*.json "
+                    "snapshots (matched by their 'schema' field)")
+    ap.add_argument("--baseline-dir", default="benchmarks",
+                    help="directory holding committed BENCH_*.json")
+    ap.add_argument("--candidate", action="append", default=[],
+                    metavar="RUN.json",
+                    help="fresh bench output to gate (repeatable)")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="allowed relative regression (default 0.5 = 50%%, "
+                         "wide because CI machines are noisy)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="gate every committed snapshot against itself")
+    ap.add_argument("--witness-json", default=None, metavar="PATH",
+                    help="dump machine-readable witnesses to PATH")
+    args = ap.parse_args(argv)
+
+    baselines: dict[str, tuple[str, dict]] = {}
+    for path in sorted(glob.glob(os.path.join(args.baseline_dir,
+                                              "BENCH_*.json"))):
+        with open(path) as fh:
+            doc = json.load(fh)
+        schema = doc.get("schema", os.path.basename(path))
+        baselines[schema] = (path, doc)
+    if not baselines:
+        print(f"no BENCH_*.json under {args.baseline_dir}", file=sys.stderr)
+        return 1
+
+    comparisons: list[tuple[str, dict, dict]] = []
+    if args.smoke:
+        for schema, (path, doc) in baselines.items():
+            comparisons.append((f"{schema} (self)", doc, doc))
+    for cpath in args.candidate:
+        with open(cpath) as fh:
+            cand = json.load(fh)
+        schema = cand.get("schema")
+        if schema not in baselines:
+            known = ", ".join(sorted(baselines))
+            print(f"{cpath}: no baseline with schema {schema!r} "
+                  f"(known: {known})", file=sys.stderr)
+            return 1
+        bpath, base = baselines[schema]
+        comparisons.append((f"{schema} ({cpath} vs {bpath})", base, cand))
+    if not comparisons:
+        ap.error("nothing to gate: pass --candidate and/or --smoke")
+
+    failures = 0
+    witnesses: list[dict] = []
+    for label, base, cand in comparisons:
+        found = bench_gate(base, cand, tolerance=args.tolerance,
+                           where=f"bench-gate:{base.get('schema')}")
+        status = "ok" if not found else "FAIL"
+        print(f"{label:60s} {status}")
+        for v in found:
+            print(f"    {v}")
+        witnesses += _witness_dicts(found)
+        failures += bool(found)
+    if failures:
+        _write_witnesses(args.witness_json, witnesses)
+        print(f"\n{failures} gate(s) failed", file=sys.stderr)
+        return 1
+    print(f"\nall {len(comparisons)} gate(s) passed "
+          f"(tolerance={args.tolerance:g})")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] == "bench-gate":
+        return bench_gate_main(argv[1:])
+    return audit_main(argv)
 
 
 if __name__ == "__main__":

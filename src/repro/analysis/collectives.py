@@ -1,0 +1,229 @@
+"""Collective-structure proofs over lowered (optimized) HLO.
+
+The paper's distributed claim (§4.4.3) is that one color-round costs one
+synchronization — in the shard_map lowering, ONE tiled ``all-gather`` per
+fused sweep step, and nothing else.  ``contracts.DISTRIBUTED_APPLY``
+proves that at the jaxpr level (one ``all_gather`` eqn in the traced loop
+body); this module proves it survives XLA: the *optimized* HLO of a mesh
+plan must contain
+
+  * exactly one all-gather inside exactly one while body for the fused
+    apply, with the while's ``known_trip_count`` equal to 2S (S = color
+    rounds; the fused sweep runs forward + backward halves), and the
+    gather tiled (result bytes == participants x operand bytes);
+  * exactly one collective (an all-gather) in the sharded SpMV;
+  * zero ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+    ``collective-permute`` anywhere in the whole PCG solve — the state
+    vectors are replicated, so the dot-product pairings need no
+    collective at all, and any reduction XLA sneaks in is a regression
+    witness;
+  * zero collectives of any kind for a single-device plan.
+
+Built on the shared HLO parse in ``analysis.hlo``; witnesses reuse
+:class:`~repro.analysis.schedule.Violation`.  CI runs this under
+``--xla_force_host_platform_device_count=4``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from . import hlo
+from .schedule import ScheduleError, Violation
+
+#: collectives the solver's lowering may never emit (the dot products run
+#: replicated; resharding mid-solve would be a layout leak)
+FORBIDDEN_COLLECTIVES = ("all-reduce", "reduce-scatter", "all-to-all",
+                         "collective-permute")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveBody:
+    """One while body carrying collectives in an optimized module."""
+    comp: str               # computation name
+    trip: int               # executed iterations of the enclosing while
+    gathers: tuple          # all-gather op names (direct ops of the body)
+    others: tuple           # non-all-gather collective op names
+
+
+def optimized_hlo(fn, *args) -> str:
+    """Optimized (post-SPMD) HLO text of ``jit(fn)`` on ``args``."""
+    import jax
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def collective_bodies(text: str) -> tuple[list, dict]:
+    """(bodies, module_counts): every while body that directly contains a
+    collective, plus the module-wide static collective census by kind."""
+    comps = hlo.parse_module(text)
+    trips: dict = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            if hlo.base_kind(op.kind) == "while":
+                t = hlo.trip_count(op, comps)
+                for cname in hlo.called_comps(op.rest):
+                    trips[cname] = max(trips.get(cname, 0), t)
+    bodies = []
+    counts: dict = {}
+    for comp in comps.values():
+        gathers, others = [], []
+        for op in comp.ops:
+            base = hlo.base_kind(op.kind)
+            if base not in hlo.COLLECTIVES or op.kind.endswith("-done"):
+                continue
+            counts[base] = counts.get(base, 0) + 1
+            (gathers if base == "all-gather" else others).append(op.name)
+        if (gathers or others) and comp.name in trips:
+            bodies.append(CollectiveBody(
+                comp=comp.name, trip=trips[comp.name],
+                gathers=tuple(gathers), others=tuple(others)))
+    return bodies, counts
+
+
+def _check_tiled(text: str, where: str) -> list[Violation]:
+    """Every all-gather must be tiled: result size == participants x
+    operand size (an untiled gather would replicate a full-length vector
+    per round — the exact failure mode shard_fused_tables exists to
+    avoid)."""
+    out = []
+    for comp in hlo.parse_module(text).values():
+        for op in comp.ops:
+            if hlo.base_kind(op.kind) != "all-gather" \
+                    or op.kind.endswith("-done"):
+                continue
+            group = hlo.replica_group_size(op)
+            ob = hlo.operand_bytes(op, comp)
+            if not ob:
+                continue            # operand outside the comp: unprovable
+            rb = op.bytes if not op.kind.endswith("-start") else op.bytes - ob
+            if group is not None and rb != group * ob:
+                out.append(Violation(
+                    kind="untiled-all-gather", where=where,
+                    detail=f"{op.name} in {comp.name}: result {rb} B != "
+                           f"{group} participants x operand {ob} B"))
+    return out
+
+
+def check_collective_structure(text: str, *, n_rounds: int | None = None,
+                               expect_gathers: int | None = None,
+                               where: str = "collectives"
+                               ) -> list[Violation]:
+    """Structural proof over one optimized module.
+
+    Always enforced: no forbidden collective kinds, at most one all-gather
+    per while body, every gather tiled.  ``n_rounds`` additionally pins
+    the sweep shape: exactly one collective-bearing while body whose trip
+    count is ``2 * n_rounds``.  ``expect_gathers`` pins the module-wide
+    static all-gather op count (e.g. 1 for the sharded SpMV).
+    """
+    bodies, counts = collective_bodies(text)
+    out: list[Violation] = []
+    for kind in FORBIDDEN_COLLECTIVES:
+        if counts.get(kind):
+            out.append(Violation(
+                kind="forbidden-collective", where=where,
+                detail=f"{counts[kind]} {kind} op(s) in the optimized "
+                       f"module; only tiled all-gathers are allowed"))
+    for b in bodies:
+        if b.others:
+            out.append(Violation(
+                kind="forbidden-collective", where=where,
+                detail=f"while body {b.comp} contains "
+                       f"{', '.join(b.others)}"))
+        if len(b.gathers) > 1:
+            out.append(Violation(
+                kind="extra-collective", where=where, round=b.trip,
+                detail=f"while body {b.comp} runs {len(b.gathers)} "
+                       f"all-gathers per step ({', '.join(b.gathers)}); "
+                       f"the sweep contract is one"))
+    if n_rounds is not None:
+        want_trip = 2 * n_rounds
+        sweep = [b for b in bodies if b.gathers]
+        if not sweep:
+            out.append(Violation(
+                kind="missing-collective", where=where,
+                detail="no while body contains an all-gather — the fused "
+                       "sweep lost its per-round tile exchange"))
+        elif len(sweep) > 1:
+            out.append(Violation(
+                kind="extra-collective", where=where,
+                detail=f"{len(sweep)} collective-bearing while bodies "
+                       f"({', '.join(b.comp for b in sweep)}); the fused "
+                       f"apply has exactly one sweep loop"))
+        elif sweep[0].trip != want_trip:
+            out.append(Violation(
+                kind="trip-count-mismatch", where=where,
+                round=sweep[0].trip,
+                detail=f"sweep body {sweep[0].comp} runs "
+                       f"{sweep[0].trip} steps, expected 2S = "
+                       f"{want_trip} (S = {n_rounds} rounds)"))
+    if expect_gathers is not None:
+        got = counts.get("all-gather", 0)
+        if got != expect_gathers:
+            out.append(Violation(
+                kind="extra-collective" if got > expect_gathers
+                else "missing-collective", where=where,
+                detail=f"{got} all-gather op(s) in the module, expected "
+                       f"exactly {expect_gathers}"))
+    out += _check_tiled(text, where)
+    return out
+
+
+def _zero_collectives(text: str, where: str) -> list[Violation]:
+    stats = hlo.parse_collectives(text)
+    if stats.total_count == 0:
+        return []
+    kinds = {k: c for k, c in stats.count_by_kind.items() if c}
+    return [Violation(
+        kind="extra-collective", where=where,
+        detail=f"single-device lowering emits collectives: {kinds}")]
+
+
+def check_plan_collectives(plan) -> list[Violation]:
+    """Compile the plan's apply, SpMV and full PCG solve and prove their
+    collective structure.  Single-device plans must lower collective-free;
+    mesh plans must match the one-tiled-all-gather-per-round contract."""
+    import jax.numpy as jnp
+
+    from repro.core.iccg import make_sharded_spmv
+    from repro.core.plan import _make_spmv
+
+    q = jnp.zeros((plan.slab_m,), dtype=plan.dtype)
+    pre = plan._precond
+    out: list[Violation] = []
+
+    if plan.mesh is None:
+        spmv = _make_spmv(plan.spmv_format, plan._spmv_n, plan._spmv_vals,
+                          plan._spmv_cols, False,
+                          spmv_backend=plan.spmv_backend,
+                          interpret=plan.interpret)
+        out += _zero_collectives(optimized_hlo(lambda x: pre(x), q),
+                                 "collectives/apply")
+        out += _zero_collectives(optimized_hlo(spmv, q),
+                                 "collectives/spmv")
+        return out
+
+    spmv = make_sharded_spmv(plan.spmv_format, plan._spmv_n, plan.mesh,
+                             plan.mesh_axis, plan._spmv_vals,
+                             plan._spmv_cols, False,
+                             spmv_backend=plan.spmv_backend,
+                             interpret=plan.interpret)
+    out += check_collective_structure(
+        optimized_hlo(lambda x: pre(x), q), n_rounds=plan.n_rounds,
+        where="collectives/apply")
+    out += check_collective_structure(
+        optimized_hlo(spmv, q), expect_gathers=1, where="collectives/spmv")
+    # whole solve: the two sweep loops (init + iteration) and the SpMV may
+    # each gather; nothing may reduce — replicated state needs no
+    # all-reduce for the dot pairings
+    fn = plan._pcg_fn(False, 1e-8, 8, False)
+    solve_text = fn.lower(plan._precond.tables, plan._spmv_vals,
+                          plan._spmv_cols, q).compile().as_text()
+    out += check_collective_structure(solve_text, where="collectives/solve")
+    return out
+
+
+def assert_plan_collectives(plan, context: str = "") -> None:
+    """``check_plan_collectives`` that raises :class:`ScheduleError`."""
+    violations = check_plan_collectives(plan)
+    if violations:
+        raise ScheduleError(violations, context=context)

@@ -40,25 +40,39 @@ class ContractError(AssertionError):
         super().__init__(prefix + "; ".join(self.findings))
 
 
+def iter_eqns(jaxpr, descend_pallas: bool = True, _path: tuple = ()):
+    """Yield ``(path, eqn)`` for every equation in ``jaxpr``, nested
+    sub-jaxprs (scan/while/cond bodies, pjit calls, pallas kernels)
+    included.  ``path`` is a tuple of ``(primitive_name, eqn_index)``
+    frames ending at the eqn itself — enough to name an offending eqn
+    uniquely in a witness.  ``descend_pallas=False`` stops at
+    ``pallas_call`` boundaries so kernel-internal eqns don't surface."""
+    for i, eqn in enumerate(jaxpr.eqns):
+        here = _path + ((eqn.primitive.name, i),)
+        yield here, eqn
+        if not descend_pallas and eqn.primitive.name == "pallas_call":
+            continue
+        for p in eqn.params.values():
+            for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                if hasattr(sub, "jaxpr") and hasattr(sub.jaxpr, "eqns"):
+                    yield from iter_eqns(sub.jaxpr, descend_pallas, here)
+                elif hasattr(sub, "eqns"):           # raw Jaxpr
+                    yield from iter_eqns(sub, descend_pallas, here)
+
+
+def format_eqn_path(path: tuple) -> str:
+    """Render an eqn path compactly: ``scan#3/convert_element_type#1``."""
+    return "/".join(f"{name}#{i}" for name, i in path)
+
+
 def primitive_counts(fn, *args, descend_pallas: bool = True) -> Counter:
     """Multiset of primitive names in ``fn``'s jaxpr, nested sub-jaxprs
     included.  ``descend_pallas=False`` stops at ``pallas_call`` boundaries
     so kernel-internal primitives don't count."""
     out: Counter = Counter()
-
-    def walk(j):
-        for eqn in j.eqns:
-            out[eqn.primitive.name] += 1
-            if not descend_pallas and eqn.primitive.name == "pallas_call":
-                continue
-            for p in eqn.params.values():
-                for sub in (p if isinstance(p, (list, tuple)) else [p]):
-                    if hasattr(sub, "jaxpr"):        # ClosedJaxpr
-                        walk(sub.jaxpr)
-                    elif hasattr(sub, "eqns"):       # raw Jaxpr
-                        walk(sub)
-
-    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    for _, eqn in iter_eqns(jax.make_jaxpr(fn)(*args).jaxpr,
+                            descend_pallas=descend_pallas):
+        out[eqn.primitive.name] += 1
     return out
 
 

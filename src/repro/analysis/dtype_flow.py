@@ -1,0 +1,234 @@
+"""Jaxpr dtype-propagation linter: prove a plan's precision contract.
+
+ROADMAP item 2 (mixed-precision preconditioning: f32/bf16 operands inside
+an f64-accumulated PCG) is only safe to attempt if the *current* dtype
+flow is provable: every lowering path must move exactly the dtypes the
+plan promised, with no silent float<->float promotion or demotion hiding
+in a traced literal, and every dot/reduction accumulating in the pinned
+accumulation dtype.  This linter walks the jaxpr of each lowering path
+(apply / SpMV / full PCG / slab, single and batched, pallas kernel bodies
+included) and checks every equation against a :class:`PrecisionContract`:
+
+  * ``convert_element_type`` between two *strong* float dtypes is a
+    silent promotion/demotion unless the contract allowlists that pair —
+    converts from weak-typed avals (python literals like ``1.0``) are the
+    legitimate jax literal-normalization idiom and pass;
+  * ``dot_general`` outputs and ``preferred_element_type`` pins, plus
+    float reductions, must land in the contract's accumulation dtype;
+  * any other strong float aval must be one of the contract's dtypes
+    (vector, accumulation, or table) — a stray f32 constant inside an
+    f64 plan is a witness, not a warning.
+
+Violations reuse the :class:`~repro.analysis.schedule.Violation` witness
+carrier; ``detail`` names the offending eqn by its nested path
+(``scan#3/convert_element_type#1``).  ``validate="deep"`` on
+``build_plan`` / ``PlanCache`` runs :func:`check_plan_dtype_flow`
+automatically; ``python -m repro.analysis --dtype-flow`` runs it from the
+CLI.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .contracts import format_eqn_path, iter_eqns
+from .schedule import MAX_VIOLATIONS, ScheduleError, Violation
+
+#: reduction primitives whose output must land in the accumulation dtype
+REDUCE_PRIMITIVES = ("reduce_sum", "reduce_prod", "cumsum", "cumprod")
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionContract:
+    """The dtype promise of one plan configuration.
+
+    ``vector``   dtype of the PCG state vectors (x, r, p, z, b)
+    ``accum``    dtype every dot/reduction must accumulate in
+    ``tables``   dtype of the packed operands (trisolve tables, SELL/ELL
+                 values)
+    ``allowed_converts``  extra ``(src, dst)`` strong float->float
+                 converts the contract permits (a future mixed-precision
+                 plan allowlists its table down-cast here, making the
+                 linter the gate that work lands behind)
+    """
+    name: str
+    vector: str
+    accum: str
+    tables: str
+    allowed_converts: tuple = ()
+
+    @property
+    def float_dtypes(self) -> frozenset:
+        return frozenset((self.vector, self.accum, self.tables))
+
+
+def contract_for_plan(plan) -> PrecisionContract:
+    """The contract a plan's knobs promise.  Today every plan is uniform
+    (tables and vectors share ``plan.dtype``, accumulation included); a
+    mixed-precision plan will derive a split contract here."""
+    d = str(np.dtype(jnp.dtype(plan.dtype)))
+    return PrecisionContract(name=f"uniform-{d}", vector=d, accum=d,
+                             tables=d)
+
+
+def _is_float(dtype) -> bool:
+    return jax.dtypes.issubdtype(dtype, jnp.floating)
+
+
+def lint_dtype_flow(fn, *args, contract: PrecisionContract,
+                    where: str = "dtype_flow",
+                    descend_pallas: bool = True) -> list[Violation]:
+    """Trace ``fn(*args)`` and check every eqn against ``contract``.
+    Returns machine-readable witnesses (empty = proven clean)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    out: list[Violation] = []
+    allowed = contract.float_dtypes
+
+    for path, eqn in iter_eqns(closed.jaxpr, descend_pallas=descend_pallas):
+        if len(out) >= MAX_VIOLATIONS:
+            break
+        prim = eqn.primitive.name
+        loc = format_eqn_path(path)
+
+        if prim == "convert_element_type":
+            src = eqn.invars[0].aval
+            dst = eqn.outvars[0].aval
+            if (_is_float(src.dtype) and _is_float(dst.dtype)
+                    and src.dtype != dst.dtype
+                    and not getattr(src, "weak_type", False)):
+                pair = (str(src.dtype), str(dst.dtype))
+                if pair not in tuple(map(tuple, contract.allowed_converts)):
+                    shrink = (np.dtype(dst.dtype).itemsize
+                              < np.dtype(src.dtype).itemsize)
+                    kind = "silent-demotion" if shrink \
+                        else "silent-promotion"
+                    out.append(Violation(
+                        kind=kind, where=where,
+                        detail=f"eqn {loc}: strong {pair[0]} -> {pair[1]} "
+                               f"convert outside contract "
+                               f"{contract.name}"))
+            continue
+
+        if prim == "dot_general":
+            pref = eqn.params.get("preferred_element_type")
+            outd = eqn.outvars[0].aval.dtype
+            if _is_float(outd) and str(outd) != contract.accum:
+                out.append(Violation(
+                    kind="accum-dtype", where=where,
+                    detail=f"eqn {loc}: dot accumulates in {outd}, "
+                           f"contract pins {contract.accum}"))
+                continue
+            if pref is not None and _is_float(np.dtype(pref)) \
+                    and str(np.dtype(pref)) != contract.accum:
+                out.append(Violation(
+                    kind="accum-dtype", where=where,
+                    detail=f"eqn {loc}: preferred_element_type="
+                           f"{np.dtype(pref)}, contract pins "
+                           f"{contract.accum}"))
+                continue
+        elif prim in REDUCE_PRIMITIVES:
+            outd = eqn.outvars[0].aval.dtype
+            if _is_float(outd) and str(outd) != contract.accum:
+                out.append(Violation(
+                    kind="accum-dtype", where=where,
+                    detail=f"eqn {loc}: {prim} accumulates in {outd}, "
+                           f"contract pins {contract.accum}"))
+                continue
+
+        # stray-dtype: any strong float aval outside the contract's set
+        for v in (*eqn.invars, *eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is None or not hasattr(aval, "dtype"):
+                continue
+            if getattr(aval, "weak_type", False):
+                continue
+            if _is_float(aval.dtype) and str(aval.dtype) not in allowed:
+                out.append(Violation(
+                    kind="stray-dtype", where=where,
+                    detail=f"eqn {loc}: {prim} touches {aval.dtype}, "
+                           f"contract {contract.name} allows only "
+                           f"{sorted(allowed)}"))
+                break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Plan-level composition: every lowering path the plan can dispatch.
+# ---------------------------------------------------------------------------
+
+def _pcg_args(plan, fn_input):
+    """Operand plumbing of ``SolverPlan._run_pcg`` / ``run_slab``: which
+    positional args the cached jitted fn takes for this plan config."""
+    if plan.layout == "round_major":
+        return (plan._precond.tables, plan._spmv_vals, plan._spmv_cols,
+                fn_input)
+    if plan.backend == "xla":
+        return (plan._precond.fwd, plan._precond.bwd, plan._spmv_vals,
+                plan._spmv_cols, fn_input)
+    return (fn_input,)
+
+
+def _plan_paths(plan) -> dict:
+    """name -> (fn, args) for every lowering path this plan dispatches."""
+    from repro.core.iccg import make_sharded_spmv
+    from repro.core.plan import _make_spmv
+
+    m = plan.slab_m
+    q = jnp.zeros((m,), dtype=plan.dtype)
+    qb = jnp.zeros((m, 2), dtype=plan.dtype)
+    pre = plan._precond
+    if plan.mesh is not None:
+        def spmv(batched):
+            return make_sharded_spmv(
+                plan.spmv_format, plan._spmv_n, plan.mesh, plan.mesh_axis,
+                plan._spmv_vals, plan._spmv_cols, batched,
+                spmv_backend=plan.spmv_backend, interpret=plan.interpret)
+    else:
+        def spmv(batched):
+            return _make_spmv(
+                plan.spmv_format, plan._spmv_n, plan._spmv_vals,
+                plan._spmv_cols, batched, spmv_backend=plan.spmv_backend,
+                interpret=plan.interpret)
+
+    paths = {
+        "apply": (lambda x: pre(x), (q,)),
+        "apply_batched": (lambda x: pre.apply_batched(x), (qb,)),
+        "spmv": (spmv(False), (q,)),
+        "spmv_batched": (spmv(True), (qb,)),
+        "pcg": (plan._pcg_fn(False, 1e-8, 8, False),
+                _pcg_args(plan, q)),
+        "pcg_batched": (plan._pcg_fn(True, 1e-8, 8, False),
+                        _pcg_args(plan, qb)),
+        "slab": (plan._slab_fn(1e-8, 8, 4),
+                 _pcg_args(plan, plan.new_slab_state(2))),
+    }
+    return paths
+
+
+def check_plan_dtype_flow(plan, contract: PrecisionContract | None = None,
+                          paths: tuple | None = None) -> list[Violation]:
+    """Lint every lowering path of a built plan against its precision
+    contract.  ``paths`` restricts to a subset of path names (default:
+    all of apply/spmv/pcg/slab, single and batched)."""
+    contract = contract or contract_for_plan(plan)
+    out: list[Violation] = []
+    for name, (fn, args) in _plan_paths(plan).items():
+        if paths is not None and name not in paths:
+            continue
+        out += lint_dtype_flow(fn, *args, contract=contract,
+                               where=f"dtype_flow/{name}")
+        if len(out) >= MAX_VIOLATIONS:
+            break
+    return out
+
+
+def assert_plan_dtype_flow(plan,
+                           contract: PrecisionContract | None = None,
+                           context: str = "") -> None:
+    """``check_plan_dtype_flow`` that raises :class:`ScheduleError`."""
+    violations = check_plan_dtype_flow(plan, contract)
+    if violations:
+        raise ScheduleError(violations, context=context)

@@ -445,7 +445,7 @@ def check_ic0_structure(st, where: str = "ic0_steps") -> list[Violation]:
 # Plan-level composition (the validate= knob).
 # ---------------------------------------------------------------------------
 
-VALIDATE_MODES = ("off", "cheap", "full")
+VALIDATE_MODES = ("off", "cheap", "full", "deep")
 
 
 def validate_plan(plan, mode: str = "full") -> list[Violation]:
@@ -456,7 +456,11 @@ def validate_plan(plan, mode: str = "full") -> list[Violation]:
     backward-is-reversed-forward check.  ``mode="full"`` — additionally
     prove the *materialized* schedules: the packed trisolve tables
     (fused round-major or per-sweep index tables, whichever the plan runs)
-    and the IC(0) factorization step schedule.  Returns the violation list
+    and the IC(0) factorization step schedule.  ``mode="deep"`` — on top
+    of "full", run the static kernel checks and trace every lowering path
+    through the dtype-flow linter (``analysis.dtype_flow``) — the only
+    mode that imports jax, so it stays a deferred import and the cheaper
+    modes keep working in jax-free contexts.  Returns the violation list
     (empty = proven); raise via :func:`assert_plan_valid`.
     """
     if mode not in VALIDATE_MODES:
@@ -475,6 +479,11 @@ def validate_plan(plan, mode: str = "full") -> list[Violation]:
         out += check_step_tables(plan._precond.fwd, where="step_tables/fwd")
         out += check_step_tables(plan._precond.bwd, where="step_tables/bwd")
     out += check_ic0_structure(plan._structure)
+    if mode == "deep" and not out:
+        from .dtype_flow import check_plan_dtype_flow
+        from .kernel_checks import check_plan_kernels
+        out += check_plan_kernels(plan)
+        out += check_plan_dtype_flow(plan)
     return out
 
 

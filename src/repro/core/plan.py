@@ -940,9 +940,12 @@ def build_plan(a: sp.spmatrix, method: str = "hbmc", block_size: int = 32,
     (``repro.analysis``) at setup: ``"cheap"`` is an O(nnz)
     round-monotonicity scan of the ordering's rounds, ``"full"``
     additionally proves the materialized trisolve tables and the IC(0)
-    step schedule dependency-ordered.  A violation raises
-    ``repro.analysis.ScheduleError`` carrying the offending row pair /
-    edge / round; ``"off"`` (default) skips the proof.
+    step schedule dependency-ordered, and ``"deep"`` adds the static
+    kernel checks plus the dtype-flow lint of every lowering path against
+    the plan's precision contract (``repro.analysis.dtype_flow``).  A
+    violation raises ``repro.analysis.ScheduleError`` carrying the
+    offending row pair / edge / round / eqn; ``"off"`` (default) skips
+    the proof.
     """
     return SolverPlan(a, method=method, block_size=block_size, w=w,
                       shift=shift, spmv_format=spmv_format, dtype=dtype,

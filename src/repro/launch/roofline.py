@@ -9,89 +9,30 @@ Three terms per (arch x shape x mesh), in seconds:
 ``compiled.cost_analysis()`` yields per-device FLOPs/bytes (the module is
 the post-SPMD per-device program, so dividing the global roofline formula
 by `chips` is already done).  Collective bytes are NOT in cost_analysis:
-we parse the optimized HLO and sum result-buffer sizes of every
+we parse the optimized HLO (``repro.analysis.hlo``, the shared parser) and
+sum result-buffer sizes of every
 all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
 with an algorithmic multiplier (ring all-reduce moves ~2x its buffer;
 all-gather/reduce-scatter move (n-1)/n ~ 1x; permute 1x).
 """
 from __future__ import annotations
 
-import dataclasses
-import re
+from repro.analysis.hlo import (CollectiveStats, analyze_hlo,
+                                parse_collectives)
 
 from .mesh import HW
 
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
-    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "token": 0,
-}
-
-_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                "collective-permute")
-_MULTIPLier = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
-               "all-to-all": 1.0, "collective-permute": 1.0}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_OP_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\w+\[[\d,]*\]\S*)\s+"
-    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start|-done)?\(", re.M)
-
-
-def _type_bytes(type_str: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-@dataclasses.dataclass
-class CollectiveStats:
-    bytes_by_kind: dict
-    count_by_kind: dict
-
-    @property
-    def weighted_bytes(self) -> float:
-        return sum(_MULTIPLier[k] * b for k, b in self.bytes_by_kind.items())
-
-    @property
-    def total_count(self) -> int:
-        return sum(self.count_by_kind.values())
-
-
-def parse_collectives(hlo_text: str) -> CollectiveStats:
-    bytes_by: dict = {k: 0 for k in _COLLECTIVES}
-    count_by: dict = {k: 0 for k in _COLLECTIVES}
-    for m in _OP_RE.finditer(hlo_text):
-        type_str, kind = m.group(1), m.group(2)
-        # async pairs appear as -start/-done; count the op once (at -start);
-        # -done lines repeat the buffer
-        line = m.group(0)
-        if f"{kind}-done(" in line:
-            continue
-        bytes_by[kind] += _type_bytes(type_str)
-        count_by[kind] += 1
-    return CollectiveStats(bytes_by_kind=bytes_by, count_by_kind=count_by)
+__all__ = ["CollectiveStats", "parse_collectives", "roofline_terms"]
 
 
 def roofline_terms(compiled, model_flops_global: float, chips: int) -> dict:
     """All three terms + bookkeeping, from a compiled jit artifact.
 
-    Uses the trip-count-aware HLO walk (hlo_analysis.py) because XLA's
+    Uses the trip-count-aware HLO walk (analysis.hlo) because XLA's
     ``cost_analysis()`` counts while-loop bodies once — fatally wrong for
     scan-over-layers models.  Raw cost_analysis numbers are kept in the
     record for comparison.
     """
-    from .hlo_analysis import analyze_hlo
-
     cost = compiled.cost_analysis()
     if isinstance(cost, list):
         cost = cost[0]

@@ -193,7 +193,9 @@ class PlanCache:
     (``repro.analysis.assert_plan_valid``) at that depth before it is
     cached or returned — a plan with a provable schedule race raises
     ``ScheduleError`` and never enters the cache, so no later hit can
-    dispatch it.  ``"off"`` (default) admits unconditionally.
+    dispatch it.  ``"deep"`` extends admission to the kernel checks and
+    the dtype-flow precision-contract lint of every lowering path.
+    ``"off"`` (default) admits unconditionally.
     """
 
     def __init__(self, capacity: int = 8,

@@ -10,6 +10,10 @@ Three layers of evidence, mirroring ``src/repro/analysis``:
      gates ``build_plan`` and ``PlanCache`` admission;
   3. **packing hardening** — corrupted CSR indices raise
      ``PackingIndexError`` on the host instead of packing garbage tables.
+
+The PR-9 analyzers (dtype flow, collective structure, traffic model,
+bench gate — including ``validate="deep"``) have their own mutation
+tier in ``tests/test_numerics_analysis.py``.
 """
 import dataclasses
 
