@@ -1,26 +1,34 @@
-"""Setup-pipeline benchmark: round-parallel IC(0) + SolverPlan reuse.
+"""Setup-pipeline benchmark: array-program ordering + SolverPlan reuse.
 
-Three questions, one JSON answer (schema ``bench_setup/v1``):
+Five questions, one JSON answer (schema ``bench_setup/v2``):
 
   1. **Setup breakdown + legacy speedup** — cold ``build_plan`` wall-clock
-     split into ordering / factor / pack, against the seed's "legacy"
-     pipeline (per-node block building, sequential up-looking ``ic0``,
-     per-row step/ELL packing — preserved verbatim below), per ordering
-     method.  Acceptance tracks ``legacy_over_plan`` for hbmc on
-     ``lap3d_16_27`` (>= 5x).
-  2. **Plan-reuse amortization** — cold ``solve_iccg`` vs warm
+     split into ordering (further split block_build / color / aggregate) /
+     factor / pack, against the seed's "legacy" pipeline (per-node Python
+     block building, sequential up-looking ``ic0``, per-row step/ELL
+     packing — preserved verbatim below), per ordering method.
+     ``block_build_speedup`` tracks the vectorized block builder against
+     the seed walk on the same matrix (acceptance: >= 3x at n=4096).
+  2. **Scheduler backends** — cold setup + warm solve for
+     ``scheduler="coloring"`` vs ``scheduler="levelset"`` on the same
+     system (round counts, schedule_s, iteration parity).
+  3. **Large-n cold setup** (``--large-n``) — one n >= 250k system
+     through the full vectorized pipeline, with a single rep of the seed
+     block walk for scale (the legacy path's only reachable stage at
+     this size).
+  4. **Plan-reuse amortization** — cold ``solve_iccg`` vs warm
      ``plan.solve`` for the same system: the warm path must spend ~zero
      host-side setup (``warm_setup_s``) and amortize the cold setup away
      after ``breakeven_solves`` solves.
-  3. **Refactor vs full setup** — ``plan.refactor(a')`` (numeric-only:
+  5. **Refactor vs full setup** — ``plan.refactor(a')`` (numeric-only:
      values change, pattern fixed — the implicit time-stepping workload)
      vs building a fresh plan.
 
-    PYTHONPATH=src python -m benchmarks.bench_setup [--smoke]
+    PYTHONPATH=src python -m benchmarks.bench_setup [--smoke] [--large-n]
         [--out BENCH_setup.json]
 
-CI runs ``--smoke`` and uploads the artifact; the committed snapshot is the
-tracked trajectory sample.
+CI runs ``--smoke --large-n`` and uploads the artifact; the committed
+snapshot is the tracked trajectory sample.
 """
 from __future__ import annotations
 
@@ -35,8 +43,8 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np  # noqa: E402
 import scipy.sparse as sp  # noqa: E402
 
-from repro.core import build_plan, ic0, sell, solve_iccg  # noqa: E402
-from repro.core import coloring  # noqa: E402
+from repro.core import build_plan, coloring, ic0, sell, solve_iccg  # noqa: E402
+from repro.core import plan as plan_mod  # noqa: E402
 from repro.core.matrices import laplace_2d, laplace_3d  # noqa: E402
 from repro.core.solvers import _order_system  # noqa: E402
 
@@ -83,6 +91,16 @@ def _seed_build_blocks(a, block_size):
         blk.sort()
         blocks.append(blk)
     return blocks
+
+
+def _seed_build_blocks_partition(a, block_size, adjacency=None):
+    """Seed walk behind the new ``build_blocks`` contract (the end-to-end
+    legacy baseline swaps this in for the vectorized builder)."""
+    blocks = _seed_build_blocks(a, block_size)
+    return coloring.BlockPartition(
+        members=np.concatenate([np.asarray(b, dtype=np.int64)
+                                for b in blocks]),
+        lens=np.array([len(b) for b in blocks], dtype=np.int64))
 
 
 def _seed_pack_steps(tri, diag, rounds, drop_mask=None):
@@ -136,12 +154,12 @@ def _legacy_setup(a, method):
 
     from repro.core.trisolve import DeviceFusedTables
     t0 = time.perf_counter()
-    orig = coloring._build_blocks
-    coloring._build_blocks = _seed_build_blocks
+    orig = plan_mod.build_blocks
+    plan_mod.build_blocks = _seed_build_blocks_partition
     try:
         sysd = _order_system(a, None, method, BS, W)
     finally:
-        coloring._build_blocks = orig
+        plan_mod.build_blocks = orig
     t1 = time.perf_counter()
     l_bar = ic0(sysd.a_bar)
     t2 = time.perf_counter()
@@ -184,10 +202,11 @@ def bench_setup_breakdown(name, a, method, reps):
     alike; best-of-reps on each."""
     a = sp.csr_matrix(a)
     breakdown = {"ordering": float("inf"), "factor": float("inf"),
-                 "pack": float("inf")}
+                 "pack": float("inf"), "block_build": float("inf"),
+                 "color": float("inf"), "aggregate": float("inf")}
     lg = {"ordering": float("inf"), "factor": float("inf"),
           "pack": float("inf")}
-    plan_s = legacy_s = float("inf")
+    plan_s = legacy_s = seed_build_s = float("inf")
     for _ in range(reps):
         plan = build_plan(a, method=method, block_size=BS, w=W)
         t = plan.timings
@@ -200,14 +219,21 @@ def bench_setup_breakdown(name, a, method, reps):
         lg["ordering"] = min(lg["ordering"], lo)
         lg["factor"] = min(lg["factor"], lf)
         lg["pack"] = min(lg["pack"], lp)
-    # the stages the round-parallel pipeline vectorizes (the Python
-    # ordering front-end is shared machinery, already ~2x the seed's)
+        if method != "mc":
+            t0 = time.perf_counter()
+            _seed_build_blocks(a, BS)
+            seed_build_s = min(seed_build_s, time.perf_counter() - t0)
+    # the stages the round-parallel pipeline vectorizes (the ordering
+    # front-end is itself an array program since bench_setup/v2)
     fp_plan = breakdown["factor"] + breakdown["pack"]
     fp_legacy = lg["factor"] + lg["pack"]
-    return {
+    out = {
         "problem": name, "n": int(a.shape[0]), "method": method,
         "plan_setup_s": round(plan_s, 5),
         "ordering_s": round(breakdown["ordering"], 5),
+        "block_build_s": round(breakdown["block_build"], 5),
+        "color_s": round(breakdown["color"], 5),
+        "aggregate_s": round(breakdown["aggregate"], 5),
         "factor_s": round(breakdown["factor"], 5),
         "pack_s": round(breakdown["pack"], 5),
         "legacy_setup_s": round(legacy_s, 5),
@@ -217,6 +243,75 @@ def bench_setup_breakdown(name, a, method, reps):
         "legacy_over_plan": round(legacy_s / plan_s, 2),
         "factor_pack_speedup": round(fp_legacy / fp_plan, 2),
     }
+    if method != "mc":
+        out["legacy_block_build_s"] = round(seed_build_s, 5)
+        out["block_build_speedup"] = round(
+            seed_build_s / max(breakdown["block_build"], 1e-9), 2)
+    return out
+
+
+def bench_scheduler_compare(name, a, reps, maxiter):
+    """coloring vs levelset rounds on the same (hbmc-ordered) system."""
+    a = sp.csr_matrix(a)
+    b = np.random.default_rng(2).normal(size=a.shape[0])
+    out = []
+    for scheduler in ("coloring", "levelset"):
+        setup_s = schedule_s = float("inf")
+        plan = None
+        for _ in range(reps):
+            plan = build_plan(a, method="hbmc", block_size=BS, w=W,
+                              scheduler=scheduler)
+            setup_s = min(setup_s, plan.timings.total)
+            schedule_s = min(schedule_s, plan.timings.schedule)
+        plan.solve(b, rtol=0.0, maxiter=maxiter)   # warm the jit cache
+        solve_s, rep = _best(
+            lambda: plan.solve(b, rtol=0.0, maxiter=maxiter), reps)
+        out.append({
+            "problem": name, "n": int(a.shape[0]), "method": "hbmc",
+            "scheduler": scheduler,
+            "setup_s": round(setup_s, 5),
+            "schedule_s": round(schedule_s, 5),
+            "n_rounds": int(plan.n_rounds),
+            "warm_solve_s": round(solve_s, 5),
+            "iterations": int(rep.result.iterations),
+        })
+    return out
+
+
+def bench_large_n(reps):
+    """n >= 250k cold setup through the vectorized pipeline.
+
+    The committed row the legacy path could not reach: the seed block
+    walk alone (one rep — it is the only legacy stage that finishes in
+    comparable time at this size; the sequential IC(0) would take
+    minutes) is compared against the full vectorized ordering stage.
+    """
+    a = sp.csr_matrix(laplace_2d(512, 512))
+    breakdown = {"block_build": float("inf"), "color": float("inf"),
+                 "aggregate": float("inf"), "ordering": float("inf"),
+                 "factor": float("inf"), "pack": float("inf")}
+    plan_s = float("inf")
+    for _ in range(reps):
+        plan = build_plan(a, method="hbmc", block_size=BS, w=W)
+        plan_s = min(plan_s, plan.timings.total)
+        for k in breakdown:
+            breakdown[k] = min(breakdown[k], getattr(plan.timings, k))
+    t0 = time.perf_counter()
+    _seed_build_blocks(a, BS)
+    seed_build_s = time.perf_counter() - t0
+    return [{
+        "problem": "lap2d_512", "n": int(a.shape[0]), "method": "hbmc",
+        "plan_setup_s": round(plan_s, 5),
+        "ordering_s": round(breakdown["ordering"], 5),
+        "block_build_s": round(breakdown["block_build"], 5),
+        "color_s": round(breakdown["color"], 5),
+        "aggregate_s": round(breakdown["aggregate"], 5),
+        "factor_s": round(breakdown["factor"], 5),
+        "pack_s": round(breakdown["pack"], 5),
+        "legacy_block_build_s": round(seed_build_s, 5),
+        "block_build_speedup": round(
+            seed_build_s / max(breakdown["block_build"], 1e-9), 2),
+    }]
 
 
 def bench_plan_reuse(name, a, reps, maxiter):
@@ -300,6 +395,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny problems, fewer reps (CI)")
+    ap.add_argument("--large-n", action="store_true",
+                    help="also run the n >= 250k cold-setup row (the "
+                         "host-side scaling tripwire)")
     ap.add_argument("--out", default="BENCH_setup.json")
     ap.add_argument("--reps", type=int, default=None)
     ap.add_argument("--maxiter", type=int, default=None)
@@ -312,6 +410,9 @@ def main() -> None:
     breakdown = [bench_setup_breakdown(name, a, method, reps)
                  for name, a in problems
                  for method in ("hbmc", "bmc", "mc")]
+    schedulers = [row for name, a in problems
+                  for row in bench_scheduler_compare(name, a, reps, maxiter)]
+    large_n = bench_large_n(1 if args.smoke else 2) if args.large_n else []
     reuse = [bench_plan_reuse(name, a, reps, maxiter)
              for name, a in problems]
     refactor = [bench_refactor(name, a, reps) for name, a in problems]
@@ -319,12 +420,14 @@ def main() -> None:
                 for name, a in problems]
 
     doc = {
-        "schema": "bench_setup/v1",
+        "schema": "bench_setup/v2",
         "platform": jax.default_backend(),
         "smoke": bool(args.smoke),
         "block_size": BS,
         "w": W,
         "setup_breakdown": breakdown,
+        "scheduler_compare": schedulers,
+        "large_n": large_n,
         "plan_reuse": reuse,
         "refactor": refactor,
         "validate_overhead": validate,
@@ -334,12 +437,31 @@ def main() -> None:
         f.write("\n")
 
     print(f"{'problem':14s} {'method':6s} {'plan s':>8s} {'legacy s':>9s} "
-          f"{'total':>7s} {'fac+pack':>9s}   (ordering/factor/pack)")
+          f"{'total':>7s} {'fac+pack':>9s} {'blk-build':>10s}   "
+          f"(build/color/agg | factor/pack)")
     for r in breakdown:
+        bb = (f"{r['block_build_speedup']:8.1f}x"
+              if "block_build_speedup" in r else " " * 9)
         print(f"{r['problem']:14s} {r['method']:6s} {r['plan_setup_s']:8.3f} "
               f"{r['legacy_setup_s']:9.3f} {r['legacy_over_plan']:6.1f}x "
-              f"{r['factor_pack_speedup']:8.1f}x   "
-              f"({r['ordering_s']:.3f}/{r['factor_s']:.3f}/{r['pack_s']:.3f})")
+              f"{r['factor_pack_speedup']:8.1f}x {bb}   "
+              f"({r['block_build_s']:.3f}/{r['color_s']:.3f}/"
+              f"{r['aggregate_s']:.3f} | "
+              f"{r['factor_s']:.3f}/{r['pack_s']:.3f})")
+    print(f"\n{'problem':14s} {'scheduler':9s} {'setup s':>8s} "
+          f"{'sched s':>8s} {'rounds':>7s} {'solve s':>8s} {'iters':>6s}")
+    for r in schedulers:
+        print(f"{r['problem']:14s} {r['scheduler']:9s} {r['setup_s']:8.3f} "
+              f"{r['schedule_s']:8.4f} {r['n_rounds']:7d} "
+              f"{r['warm_solve_s']:8.4f} {r['iterations']:6d}")
+    for r in large_n:
+        print(f"\nlarge-n {r['problem']} (n={r['n']}): "
+              f"setup {r['plan_setup_s']:.3f}s "
+              f"(build {r['block_build_s']:.3f} / color {r['color_s']:.3f} "
+              f"/ agg {r['aggregate_s']:.3f} / factor {r['factor_s']:.3f} "
+              f"/ pack {r['pack_s']:.3f}); seed block walk "
+              f"{r['legacy_block_build_s']:.3f}s "
+              f"-> {r['block_build_speedup']:.1f}x")
     print(f"\n{'problem':14s} {'cold s':>8s} {'warm s':>8s} {'ratio':>6s} "
           f"{'warm setup s':>13s} {'breakeven':>10s}")
     for r in reuse:

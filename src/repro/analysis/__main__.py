@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m repro.analysis
         [--problems thermal2,parabolic_fem,...]   (default: all paper five)
         [--methods hbmc,bmc,mc]                   (default: hbmc,bmc,mc)
+        [--schedulers coloring,levelset]          (default: coloring)
         [--scale tiny|small|bench]                (default: tiny)
         [--validate cheap|full|deep]              (default: full)
         [--contracts]        also lint the apply/SpMV jaxprs
@@ -59,7 +60,8 @@ def _matrix(name: str, scale: str):
 def audit(name: str, method: str, scale: str, validate: str,
           contracts: bool, backend: str, spmv_backend: str,
           dtype_flow: bool = False, collectives: bool = False,
-          traffic: bool = False, traffic_tol: float = 0.10) -> list:
+          traffic: bool = False, traffic_tol: float = 0.10,
+          scheduler: str = "coloring") -> list:
     """Build + audit one (problem, method); returns findings.
 
     Findings are :class:`Violation` instances where a linter produced a
@@ -77,7 +79,7 @@ def audit(name: str, method: str, scale: str, validate: str,
     spmv_format = "sell" if spmv_backend == "pallas" else "ell"
     plan = build_plan(a, method=method, shift=shift, backend=backend,
                       spmv_backend=spmv_backend, spmv_format=spmv_format,
-                      validate="off")
+                      scheduler=scheduler, validate="off")
     findings: list = list(validate_plan(plan, validate))
     findings += check_plan_kernels(plan)
     if contracts:
@@ -99,6 +101,7 @@ def audit(name: str, method: str, scale: str, validate: str,
             mesh = Mesh(np.array(devs), ("dev",))
             mplan = build_plan(a, method=method, shift=shift,
                                backend="xla", spmv_backend="xla",
+                               scheduler=scheduler,
                                mesh=mesh, mesh_axis="dev", validate="off")
             findings += check_plan_collectives(mplan)
         else:
@@ -129,6 +132,9 @@ def audit_main(argv: list[str] | None = None) -> int:
                          "laplace2d, laplace3d)")
     ap.add_argument("--methods", default="hbmc,bmc,mc",
                     help="comma-separated orderings (hbmc,bmc,mc,natural)")
+    ap.add_argument("--schedulers", default="coloring",
+                    help="comma-separated round-schedule backends to audit "
+                         "(coloring,levelset)")
     ap.add_argument("--scale", default="tiny",
                     choices=("tiny", "small", "bench"))
     ap.add_argument("--validate", default="full",
@@ -157,32 +163,38 @@ def audit_main(argv: list[str] | None = None) -> int:
 
     problems = [p for p in args.problems.split(",") if p]
     methods = [m for m in args.methods.split(",") if m]
+    schedulers = [s for s in args.schedulers.split(",") if s]
     failures = 0
     witnesses: list[dict] = []
     for name in problems:
         for method in methods:
-            try:
-                findings = audit(name, method, args.scale, args.validate,
-                                 args.contracts, args.backend,
-                                 args.spmv_backend,
-                                 dtype_flow=args.dtype_flow,
-                                 collectives=args.collectives,
-                                 traffic=args.traffic,
-                                 traffic_tol=args.traffic_tol)
-            except Exception as e:  # a build failure is an audit failure
-                findings = [f"build failed: {type(e).__name__}: {e}"]
-            status = "ok" if not findings else "FAIL"
-            print(f"{name:16s} {method:8s} {args.validate:5s} {status}")
-            for f in findings:
-                print(f"    {f}")
-            witnesses += _witness_dicts(findings)
-            failures += bool(findings)
+            for scheduler in schedulers:
+                try:
+                    findings = audit(name, method, args.scale,
+                                     args.validate,
+                                     args.contracts, args.backend,
+                                     args.spmv_backend,
+                                     dtype_flow=args.dtype_flow,
+                                     collectives=args.collectives,
+                                     traffic=args.traffic,
+                                     traffic_tol=args.traffic_tol,
+                                     scheduler=scheduler)
+                except Exception as e:  # a build failure is an audit failure
+                    findings = [f"build failed: {type(e).__name__}: {e}"]
+                status = "ok" if not findings else "FAIL"
+                print(f"{name:16s} {method:8s} {scheduler:9s} "
+                      f"{args.validate:5s} {status}")
+                for f in findings:
+                    print(f"    {f}")
+                witnesses += _witness_dicts(findings)
+                failures += bool(findings)
     if failures:
         _write_witnesses(args.witness_json, witnesses)
         print(f"\n{failures} audit(s) failed", file=sys.stderr)
         return 1
-    print(f"\nall {len(problems) * len(methods)} audits clean "
-          f"(validate={args.validate}, backend={args.backend})")
+    print(f"\nall {len(problems) * len(methods) * len(schedulers)} audits "
+          f"clean (validate={args.validate}, backend={args.backend}, "
+          f"schedulers={','.join(schedulers)})")
     return 0
 
 

@@ -238,8 +238,8 @@ def assert_plan_traffic(plan, tolerance: float = 0.10,
 #: record fields that identify a list entry (used as the metric path
 #: segment so records match structurally, not positionally)
 _ID_KEYS = ("problem", "layout", "backend", "spmv_backend", "method",
-            "component", "name", "kind", "B", "slab_width", "width",
-            "devices", "n")
+            "scheduler", "stage", "component", "name", "kind", "B",
+            "slab_width", "width", "devices", "n")
 _LOWER_SUFFIX = ("_us", "_ms", "_s", "_seconds")
 _LOWER_SUBSTR = ("latency", "time", "p50", "p90", "p99")
 _HIGHER_SUBSTR = ("per_s", "per_sec", "throughput", "speedup", "hit_rate")

@@ -1,7 +1,9 @@
 """Core library: the paper's contribution (HBMC ordering + parallel ICCG)."""
-from .coloring import (BMCOrdering, MCOrdering, block_multicolor_ordering,
+from .coloring import (BlockPartition, BMCOrdering, MCOrdering,
+                       block_multicolor_ordering, build_blocks, color_blocks,
                        multicolor_ordering, pad_system)
-from .graph import check_er_condition, invert_perm, ordering_digraph_edges, permute_system
+from .graph import (check_er_condition, invert_perm, level_sets,
+                    ordering_digraph_edges, permute_system)
 from .hbmc import (HBMCOrdering, hbmc_from_bmc, hbmc_ordering,
                    pad_system_hbmc, verify_level2_structure)
 from .ic0 import (FactorBreakdownError, IC0Structure, ic0, ic0_error,
@@ -14,13 +16,15 @@ from .iccg import (BREAKDOWN, CONVERGED, DIVERGED, DIVERGENCE_FACTOR,
                    pcg_batched, pcg_iteration, spmv_ell, spmv_ell_batched,
                    spmv_sell, spmv_sell_batched, status_name)
 from .matrices import PAPER_PROBLEMS, PAPER_SHIFTS, paper_problem
-from .plan import ON_BREAKDOWN, SetupBreakdown, SolverPlan, build_plan
+from .plan import (ON_BREAKDOWN, SCHEDULERS, SetupBreakdown, SolverPlan,
+                   build_plan)
 from .sell import (FusedRoundMajorTables, PackingIndexError, RoundMajorLayout,
                    RoundMajorTables,
                    SellMatrix, StepTables, fuse_round_major, pack_ell,
                    pack_factor, pack_factor_hbmc, pack_sell, pack_steps,
                    permute_round_major, round_major_layout, rounds_bmc,
-                   rounds_hbmc, rounds_mc, rounds_natural, to_round_major)
+                   rounds_hbmc, rounds_levelset, rounds_mc, rounds_natural,
+                   to_round_major)
 from .smoothers import GSSmoother, build_gs_smoother, gs_solve
 from .solvers import (BatchedICCGReport, ICCGReport, solve_iccg,
                       solve_iccg_batched)

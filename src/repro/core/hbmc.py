@@ -21,6 +21,24 @@ import numpy as np
 import scipy.sparse as sp
 
 from .coloring import BMCOrdering, block_multicolor_ordering
+from .graph import ragged_arange
+
+
+def _validate_w(w, who: str) -> int:
+    """Entry-point guard: ``w`` must be a positive int.
+
+    ``w=0`` used to emit divide-by-zero RuntimeWarnings from the padded
+    block-count arithmetic and then die with an opaque ``IndexError``
+    deep in the secondary-permutation scatter.
+    """
+    if isinstance(w, bool) or not isinstance(w, (int, np.integer)):
+        raise ValueError(
+            f"{who}: w must be an int, got {type(w).__name__} ({w!r})")
+    if w < 1:
+        raise ValueError(
+            f"{who}: w must be >= 1, got {w} "
+            f"(w < 1 divides by zero in the level-1 aggregation)")
+    return int(w)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,11 +63,13 @@ class HBMCOrdering:
 
 
 def hbmc_ordering(a: sp.spmatrix, block_size: int, w: int) -> HBMCOrdering:
+    w = _validate_w(w, "hbmc_ordering")   # fail before the block build
     bmc = block_multicolor_ordering(a, block_size)
     return hbmc_from_bmc(bmc, w)
 
 
 def hbmc_from_bmc(bmc: BMCOrdering, w: int) -> HBMCOrdering:
+    w = _validate_w(w, "hbmc_from_bmc")
     b_s = bmc.block_size
     n_colors = bmc.n_colors
     m = bmc.blocks_per_color                      # blocks per color (real)
@@ -64,18 +84,19 @@ def hbmc_from_bmc(bmc: BMCOrdering, w: int) -> HBMCOrdering:
     # Final layout: color-major, level-1-block-major, round l, lane j
     #   (k-th block of a color sits at lane j = k % w of level-1 block k // w;
     #    its t-th unknown lands in round l = t).
+    # One segmented expression over all (color, block) pairs at once: the
+    # per-block BMC/final bases are (total_blocks,) vectors, the in-block
+    # offset t broadcasts along the second axis.
     bmc_color_start = np.concatenate(
         [[0], np.cumsum(bmc.blocks_per_color * b_s)])
     secondary = np.empty(bmc.n_padded, dtype=np.int64)
-    for c in range(n_colors):
-        nb = int(m[c])
-        base_bmc = int(bmc_color_start[c])
-        base_fin = int(color_start[c])
-        k = np.arange(nb)[:, None]      # block index within color
-        t = np.arange(b_s)[None, :]     # offset inside the BMC block
-        bmc_idx = base_bmc + k * b_s + t
-        fin_idx = base_fin + (k // w) * (b_s * w) + t * w + (k % w)
-        secondary[bmc_idx.ravel()] = fin_idx.ravel()
+    color_of = np.repeat(np.arange(n_colors), m)   # per real block
+    k = ragged_arange(m)                           # block index within color
+    base_bmc = bmc_color_start[color_of] + k * b_s
+    base_fin = color_start[color_of] + (k // w) * (b_s * w) + (k % w)
+    t = np.arange(b_s)[None, :]                    # offset inside the block
+    secondary[(base_bmc[:, None] + t).ravel()] = (
+        base_fin[:, None] + t * w).ravel()
 
     perm = secondary[bmc.perm]          # old -> bmc-padded -> final
 
@@ -110,6 +131,10 @@ def pad_system_hbmc(a: sp.spmatrix, b: np.ndarray | None, ordering: HBMCOrdering
     b_bar = None
     if b is not None:
         b = np.asarray(b)          # keep the caller's dtype (f32 stays f32)
+        if not np.issubdtype(b.dtype, np.floating):
+            # same promotion rule as the matrix data: an int RHS must not
+            # flow into the float solve un-promoted
+            b = b.astype(np.float64)
         b_bar = np.zeros(npad, dtype=b.dtype)
         b_bar[p] = b
     return a_bar, b_bar

@@ -36,9 +36,10 @@ import scipy.sparse as sp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import sell
-from .coloring import block_multicolor_ordering, multicolor_ordering, pad_system
-from .graph import permute_system
-from .hbmc import hbmc_from_bmc, pad_system_hbmc
+from .coloring import (_validate_block_size, build_blocks, color_blocks,
+                       multicolor_ordering, pad_system)
+from .graph import adjacency_lists, level_sets, permute_system
+from .hbmc import _validate_w, hbmc_from_bmc, pad_system_hbmc
 from .ic0 import FactorBreakdownError, ic0_refactor, ic0_structure
 from .iccg import (DIVERGENCE_FACTOR, STAGNATION_WINDOW,
                    BatchedPCGResult, PCGResult, SlabState,
@@ -67,6 +68,7 @@ class ICCGReport:
     backend: str = "xla"
     layout: str = "round_major"
     spmv_backend: str = "xla"
+    scheduler: str = "coloring"
 
 
 @dataclasses.dataclass
@@ -84,15 +86,28 @@ class BatchedICCGReport:
     backend: str = "xla"
     layout: str = "round_major"
     spmv_backend: str = "xla"
+    scheduler: str = "coloring"
 
 
 @dataclasses.dataclass
 class SetupBreakdown:
-    """Host-side setup wall-clock, by pipeline stage (seconds)."""
+    """Host-side setup wall-clock, by pipeline stage (seconds).
+
+    The ordering stage splits further (``ordering`` is their sum plus
+    the permute/pad assembly): ``block_build`` is the BMC block growth,
+    ``color`` the quotient-graph coloring + permutation assembly,
+    ``aggregate`` the HBMC level-1 interleaving, ``schedule`` the
+    level-set sweep of ``scheduler="levelset"`` plans.  Stages a method
+    or scheduler does not run stay 0.0.
+    """
     ordering: float
     factor: float           # IC(0): structure analysis + numeric phase
     pack: float             # step packing + fuse + SpMV operand + transfer
     total: float
+    block_build: float = 0.0
+    color: float = 0.0
+    aggregate: float = 0.0
+    schedule: float = 0.0
 
 
 @dataclasses.dataclass
@@ -109,39 +124,94 @@ class _System:
     drop: np.ndarray | None
     # re-applies the SAME ordering to a new matrix (refactor path)
     apply_ordering: Callable[[sp.spmatrix], sp.csr_matrix] | None = None
+    # per-stage wall clock of the ordering pipeline (SetupBreakdown keys)
+    ordering_stages: dict[str, float] | None = None
+
+
+# Round-schedule backends behind ``build_plan(scheduler=...)``.  Every
+# scheduler fills the same fwd/bwd-rounds contract of ``_System`` (bwd is
+# exactly the reversed fwd round list), so everything downstream — IC(0)
+# structure, StepTables, the fused sweep, sharding — is scheduler-blind.
+SCHEDULERS = ("coloring", "levelset")
+
+
+def _levelset_rounds(a_bar: sp.spmatrix) -> tuple[list, list, float]:
+    """Replace color rounds with dependency-level rounds on ``a_bar``.
+
+    Level sets are the minimal-round legal schedule for the (already
+    ordered/padded) pattern: on patterns where coloring degrades to many
+    thin rounds, levels recover the widest legal parallelism.  Dummy
+    rows are diagonal-only, land in level 0, and stay masked by the
+    plan's drop mask.  Returns (fwd_rounds, bwd_rounds, seconds).
+    """
+    t0 = time.perf_counter()
+    level, counts = level_sets(a_bar)
+    fwd = sell.rounds_levelset(level, counts)
+    return fwd, fwd[::-1], time.perf_counter() - t0
 
 
 def _order_system(a: sp.csr_matrix, b: np.ndarray | None, method: str,
-                  block_size: int, w: int) -> _System:
+                  block_size: int, w: int,
+                  scheduler: str = "coloring") -> _System:
     n = a.shape[0]
+    stages: dict[str, float] = {}
+
+    def _bmc_stages():
+        # shared symmetrized adjacency: computed once, reused by both
+        # stages (the block build and the quotient-graph contraction)
+        t0 = time.perf_counter()
+        adjacency = adjacency_lists(a)
+        part = build_blocks(a, block_size, adjacency=adjacency)
+        t1 = time.perf_counter()
+        bmc = color_blocks(a, part, block_size, adjacency=adjacency)
+        stages["block_build"] = t1 - t0
+        stages["color"] = time.perf_counter() - t1
+        return bmc
+
     if method == "mc":
         mc = multicolor_ordering(a)
         a_bar, b_bar = permute_system(a, b, mc.perm)
-        return _System(a_bar, b_bar, mc.perm, n, n, mc.n_colors,
+        sysd = _System(a_bar, b_bar, mc.perm, n, n, mc.n_colors,
                        sell.rounds_mc(mc, reverse=False),
                        sell.rounds_mc(mc, reverse=True), None,
                        lambda a2: permute_system(a2, None, mc.perm)[0])
-    if method == "bmc":
-        bmc = block_multicolor_ordering(a, block_size)
+    elif method == "bmc":
+        bmc = _bmc_stages()
         a_bar, b_bar = pad_system(a, b, bmc)
-        return _System(a_bar, b_bar, bmc.perm, n, bmc.n_padded, bmc.n_colors,
+        sysd = _System(a_bar, b_bar, bmc.perm, n, bmc.n_padded, bmc.n_colors,
                        sell.rounds_bmc(bmc, reverse=False),
                        sell.rounds_bmc(bmc, reverse=True), bmc.is_dummy,
                        lambda a2: pad_system(a2, None, bmc)[0])
-    if method == "hbmc":
-        bmc = block_multicolor_ordering(a, block_size)
+    elif method == "hbmc":
+        bmc = _bmc_stages()
+        t0 = time.perf_counter()
         hb = hbmc_from_bmc(bmc, w)
+        stages["aggregate"] = time.perf_counter() - t0
         a_bar, b_bar = pad_system_hbmc(a, b, hb)
-        return _System(a_bar, b_bar, hb.perm, n, hb.n_final, hb.n_colors,
+        sysd = _System(a_bar, b_bar, hb.perm, n, hb.n_final, hb.n_colors,
                        sell.rounds_hbmc(hb, reverse=False),
                        sell.rounds_hbmc(hb, reverse=True), hb.is_dummy,
                        lambda a2: pad_system_hbmc(a2, None, hb)[0])
-    if method == "natural":
-        return _System(a, b, np.arange(n), n, n, n,
+    elif method == "natural":
+        sysd = _System(a, b, np.arange(n), n, n, n,
                        sell.rounds_natural(n, reverse=False),
                        sell.rounds_natural(n, reverse=True), None,
                        lambda a2: sp.csr_matrix(a2))
-    raise ValueError(f"unknown method {method!r}")
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    if scheduler == "levelset":
+        # keep the method's ordering/padding (and so its cache-locality
+        # and fill properties) but re-derive the rounds from the actual
+        # dependency levels of the ordered pattern
+        fwd, bwd, secs = _levelset_rounds(sysd.a_bar)
+        sysd.fwd_rounds, sysd.bwd_rounds = fwd, bwd
+        stages["schedule"] = secs
+    elif scheduler != "coloring":
+        raise ValueError(f"unknown scheduler {scheduler!r}; expected one "
+                         f"of {SCHEDULERS}")
+    sysd.ordering_stages = stages
+    return sysd
 
 
 def _pack_spmv(a_op: sp.spmatrix, spmv_format: str, w: int, dtype
@@ -251,13 +321,20 @@ class SolverPlan:
                  layout: str = "round_major", mesh: Mesh | None = None,
                  mesh_axis: str = "data", lane_multiple: int = 1,
                  spmv_backend: str = "xla", on_breakdown: str = "clamp",
-                 validate: str = "off"):
+                 validate: str = "off", scheduler: str = "coloring"):
         # deferred: repro.analysis is jax-free but imports nothing from
         # core.plan, so this only guards against future cycles
         from repro.analysis.schedule import VALIDATE_MODES
         if validate not in VALIDATE_MODES:
             raise ValueError(f"unknown validate mode {validate!r}; "
                              f"expected one of {VALIDATE_MODES}")
+        if scheduler not in SCHEDULERS:
+            raise ValueError(f"unknown scheduler {scheduler!r}; expected "
+                             f"one of {SCHEDULERS}")
+        # fail fast with the argument's name, before any ordering work:
+        # block_size=0 / w=0 used to flow through and corrupt the plan
+        block_size = _validate_block_size(block_size, "build_plan")
+        w = _validate_w(w, "build_plan")
         if on_breakdown not in ON_BREAKDOWN:
             raise ValueError(f"unknown on_breakdown {on_breakdown!r}; "
                              f"expected one of {ON_BREAKDOWN}")
@@ -292,6 +369,7 @@ class SolverPlan:
             lane_multiple = int(np.lcm(lane_multiple,
                                        mesh.shape[mesh_axis]))
         self.method = method
+        self.scheduler = scheduler
         self.block_size = block_size
         self.w = w
         self.shift = shift
@@ -324,7 +402,8 @@ class SolverPlan:
         self._a_indices = a.indices.copy()
 
         t0 = time.perf_counter()
-        self._sysd = _order_system(a, None, method, block_size, w)
+        self._sysd = _order_system(a, None, method, block_size, w,
+                                   scheduler=scheduler)
         t1 = time.perf_counter()
         self._structure = ic0_structure(self._sysd.a_bar,
                                         self._sysd.fwd_rounds)
@@ -341,7 +420,8 @@ class SolverPlan:
                               context=f"build_plan(method={method!r})")
         t3 = time.perf_counter()
         self.timings = SetupBreakdown(ordering=t1 - t0, factor=t2 - t1,
-                                      pack=t3 - t2, total=t3 - t0)
+                                      pack=t3 - t2, total=t3 - t0,
+                                      **(self._sysd.ordering_stages or {}))
         self.setup_count += 1
         self.lane_occupancy = _occupancy_from_rounds(self._sysd.fwd_rounds,
                                                      self._sysd.drop)
@@ -842,7 +922,7 @@ class SolverPlan:
             n_rounds=self.n_rounds, setup_seconds=t1 - t0,
             solve_seconds=t2 - t1, lane_occupancy=self.lane_occupancy,
             x=x_out, backend=self.backend, layout=self.layout,
-            spmv_backend=self.spmv_backend)
+            spmv_backend=self.spmv_backend, scheduler=self.scheduler)
 
     def solve(self, b: np.ndarray, rtol: float = 1e-7,
               maxiter: int = 10_000,
@@ -876,7 +956,7 @@ class SolverPlan:
             n_rounds=self.n_rounds, setup_seconds=t1 - t0,
             solve_seconds=t2 - t1, lane_occupancy=self.lane_occupancy,
             x=x_out, backend=self.backend, layout=self.layout,
-            spmv_backend=self.spmv_backend)
+            spmv_backend=self.spmv_backend, scheduler=self.scheduler)
 
     def solve_batched(self, b: np.ndarray, rtol: float = 1e-7,
                       maxiter: int = 10_000,
@@ -905,7 +985,7 @@ class SolverPlan:
             n_rounds=self.n_rounds, setup_seconds=t1 - t0,
             solve_seconds=t2 - t1, lane_occupancy=self.lane_occupancy,
             x=x_out, backend=self.backend, layout=self.layout,
-            spmv_backend=self.spmv_backend)
+            spmv_backend=self.spmv_backend, scheduler=self.scheduler)
 
 
 def build_plan(a: sp.spmatrix, method: str = "hbmc", block_size: int = 32,
@@ -917,7 +997,8 @@ def build_plan(a: sp.spmatrix, method: str = "hbmc", block_size: int = 32,
                lane_multiple: int = 1,
                spmv_backend: str = "xla",
                on_breakdown: str = "clamp",
-               validate: str = "off") -> SolverPlan:
+               validate: str = "off",
+               scheduler: str = "coloring") -> SolverPlan:
     """One-time setup: ordering -> round-parallel IC(0) -> packed operators.
 
     Returns a ``SolverPlan`` whose ``solve`` / ``solve_batched`` /
@@ -946,6 +1027,14 @@ def build_plan(a: sp.spmatrix, method: str = "hbmc", block_size: int = 32,
     violation raises ``repro.analysis.ScheduleError`` carrying the
     offending row pair / edge / round / eqn; ``"off"`` (default) skips
     the proof.
+
+    ``scheduler`` picks how the ordered pattern is cut into parallel
+    rounds: ``"coloring"`` (default) uses the method's color rounds,
+    ``"levelset"`` re-derives the rounds from the dependency levels of
+    the ordered pattern — the minimal-round legal schedule, for
+    irregular patterns where coloring degrades to thin rounds.  Both
+    feed the identical ``StepTables`` contract, so every backend /
+    layout / mesh combination composes with either scheduler.
     """
     return SolverPlan(a, method=method, block_size=block_size, w=w,
                       shift=shift, spmv_format=spmv_format, dtype=dtype,
@@ -953,7 +1042,7 @@ def build_plan(a: sp.spmatrix, method: str = "hbmc", block_size: int = 32,
                       mesh=mesh, mesh_axis=mesh_axis,
                       lane_multiple=lane_multiple,
                       spmv_backend=spmv_backend, on_breakdown=on_breakdown,
-                      validate=validate)
+                      validate=validate, scheduler=scheduler)
 
 
 # ---------------------------------------------------------------------------

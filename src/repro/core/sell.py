@@ -118,6 +118,25 @@ def rounds_mc(mc, reverse: bool = False) -> list[np.ndarray]:
     return out
 
 
+def rounds_levelset(level: np.ndarray, counts: np.ndarray,
+                    reverse: bool = False) -> list[np.ndarray]:
+    """Rounds from a level-set schedule (``graph.level_sets``).
+
+    Round ``l`` holds every row of dependency level ``l``, in ascending
+    row order (the stable sort keeps the in-round lane order
+    deterministic).  This is the minimal-round legal schedule for the
+    pattern: row counts per round are whatever the dependency structure
+    allows, unlike the fixed-width color rounds.  ``reverse=True``
+    reverses the round *order* only (the backward-substitution
+    convention shared by every ``rounds_*``).
+    """
+    order = np.argsort(level, kind="stable")
+    out = np.split(order, np.cumsum(counts)[:-1]) if len(counts) else []
+    if reverse:
+        out = out[::-1]
+    return out
+
+
 def rounds_natural(n: int, reverse: bool = False) -> list[np.ndarray]:
     """Fully sequential rounds (the unordered baseline)."""
     out = [np.array([i]) for i in range(n)]

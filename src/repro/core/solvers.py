@@ -41,7 +41,8 @@ def solve_iccg(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
                layout: str = "round_major", mesh=None,
                mesh_axis: str = "data",
                lane_multiple: int = 1,
-               spmv_backend: str = "xla") -> ICCGReport:
+               spmv_backend: str = "xla",
+               scheduler: str = "coloring") -> ICCGReport:
     """One-shot solve: build a ``SolverPlan``, solve, fold setup into the
     report's ``setup_seconds``.  ``mesh=`` distributes the solve (see
     ``build_plan``); ``spmv_backend="pallas"`` (with
@@ -52,7 +53,7 @@ def solve_iccg(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
                       backend=backend, interpret=interpret, layout=layout,
                       mesh=mesh, mesh_axis=mesh_axis,
                       lane_multiple=lane_multiple,
-                      spmv_backend=spmv_backend)
+                      spmv_backend=spmv_backend, scheduler=scheduler)
     rep = plan.solve(b, rtol=rtol, maxiter=maxiter,
                      record_history=record_history)
     rep.setup_seconds += plan.timings.total
@@ -68,7 +69,8 @@ def solve_iccg_batched(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
                        record_history: bool = False, mesh=None,
                        mesh_axis: str = "data",
                        lane_multiple: int = 1,
-                       spmv_backend: str = "xla") -> BatchedICCGReport:
+                       spmv_backend: str = "xla",
+                       scheduler: str = "coloring") -> BatchedICCGReport:
     """Solve A x_j = b_j for all columns of ``b`` ((n, B)) in one PCG loop."""
     # the caller named `dtype=` explicitly, so casting b to it here is the
     # documented opt-in; plan.solve_batched itself rejects float-dtype
@@ -82,7 +84,7 @@ def solve_iccg_batched(a: sp.spmatrix, b: np.ndarray, method: str = "hbmc",
                       backend=backend, interpret=interpret, layout=layout,
                       mesh=mesh, mesh_axis=mesh_axis,
                       lane_multiple=lane_multiple,
-                      spmv_backend=spmv_backend)
+                      spmv_backend=spmv_backend, scheduler=scheduler)
     rep = plan.solve_batched(b, rtol=rtol, maxiter=maxiter,
                              record_history=record_history)
     rep.setup_seconds += plan.timings.total

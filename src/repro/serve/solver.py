@@ -103,6 +103,7 @@ class PlanKey:
     interpret: bool | None
     lane_multiple: int
     on_breakdown: str = "clamp"
+    scheduler: str = "coloring"
 
     @classmethod
     def from_matrix(cls, a: sp.spmatrix, *, method: str = "hbmc",
@@ -111,6 +112,7 @@ class PlanKey:
                     backend: str = "xla", interpret: bool | None = None,
                     layout: str = "round_major", lane_multiple: int = 1,
                     spmv_backend: str = "xla", on_breakdown: str = "clamp",
+                    scheduler: str = "coloring",
                     **extra) -> tuple["PlanKey", sp.csr_matrix]:
         """Key for (a, knobs); also returns the canonicalized CSR matrix."""
         if extra.get("mesh") is not None:
@@ -128,7 +130,7 @@ class PlanKey:
                   spmv_backend=spmv_backend, layout=layout,
                   interpret=interpret,
                   lane_multiple=int(lane_multiple),
-                  on_breakdown=on_breakdown)
+                  on_breakdown=on_breakdown, scheduler=scheduler)
         return key, a
 
 

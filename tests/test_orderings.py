@@ -91,3 +91,75 @@ def test_hbmc_property_random_spd(n, bs, w, seed):
     assert verify_level2_structure(a_hb, hb)
     # the full permutation embeds every original unknown exactly once
     assert len(set(hb.perm.tolist())) == n
+
+
+# ---------------------------------------------------------------------------
+# Entry-point validation regressions (block_size / w / RHS dtype).
+# ---------------------------------------------------------------------------
+
+def test_block_size_validation_names_the_argument():
+    """block_size=0 used to silently return an empty padded system
+    (n_padded=0); every entry point must reject it with a ValueError
+    naming the argument."""
+    a = laplace_2d(6, 6)
+    from repro.core import build_blocks, build_plan, color_blocks
+    for bad in (0, -1, -32):
+        for fn in (lambda: block_multicolor_ordering(a, bad),
+                   lambda: build_blocks(a, bad),
+                   lambda: build_plan(a, block_size=bad)):
+            with pytest.raises(ValueError, match="block_size.*>= 1"):
+                fn()
+    for bad in (1.5, "8", True, None):
+        with pytest.raises(ValueError, match="block_size must be an int"):
+            block_multicolor_ordering(a, bad)
+        with pytest.raises(ValueError, match="block_size must be an int"):
+            build_plan(a, block_size=bad)
+    # np integers are fine (callers index with numpy scalars)
+    assert block_multicolor_ordering(a, np.int64(4)).block_size == 4
+
+
+def test_w_validation_names_the_argument():
+    """w=0 used to emit divide-by-zero RuntimeWarnings and die with an
+    opaque IndexError inside the secondary-permutation scatter."""
+    import warnings
+
+    from repro.core import build_plan, hbmc_ordering
+    a = laplace_2d(6, 6)
+    bmc = block_multicolor_ordering(a, 4)
+    for bad in (0, -1, -8):
+        for fn in (lambda: hbmc_from_bmc(bmc, bad),
+                   lambda: hbmc_ordering(a, 4, bad),
+                   lambda: build_plan(a, w=bad)):
+            with warnings.catch_warnings():
+                warnings.simplefilter("error")   # no RuntimeWarnings allowed
+                with pytest.raises(ValueError, match="w must be >= 1"):
+                    fn()
+    for bad in (2.5, "4", True, None):
+        with pytest.raises(ValueError, match="w must be an int"):
+            hbmc_from_bmc(bmc, bad)
+        with pytest.raises(ValueError, match="w must be an int"):
+            build_plan(a, w=bad)
+    assert hbmc_from_bmc(bmc, np.int64(2)).w == 2
+
+
+def test_pad_system_promotes_int_rhs_like_matrix_data():
+    """pad_system / pad_system_hbmc promote int matrix data to f64; an
+    int RHS must follow the same rule instead of flowing into the float
+    solve un-promoted."""
+    a = laplace_2d(6, 6)
+    a_int = sp.csr_matrix((a.data.astype(np.int64) * 0 + 4,
+                           a.indices, a.indptr), shape=a.shape)
+    b_int = np.arange(a.shape[0], dtype=np.int32)
+    bmc = block_multicolor_ordering(a_int, 4)
+    a_bar, b_bar = pad_system(a_int, b_int, bmc)
+    assert a_bar.dtype == np.float64
+    assert b_bar.dtype == np.float64
+    np.testing.assert_array_equal(np.sort(b_bar[bmc.perm]), np.sort(b_int))
+    hb = hbmc_from_bmc(bmc, 2)
+    a_bar2, b_bar2 = pad_system_hbmc(a_int, b_int, hb)
+    assert a_bar2.dtype == np.float64
+    assert b_bar2.dtype == np.float64
+    # float32 callers keep float32 (the promotion is int -> f64 only)
+    b_f32 = b_int.astype(np.float32)
+    assert pad_system(a_int, b_f32, bmc)[1].dtype == np.float32
+    assert pad_system_hbmc(a_int, b_f32, hb)[1].dtype == np.float32

@@ -151,3 +151,72 @@ def test_round_schedules_prove_race_free(kind, size, seed, bs, w):
                             drop_mask=sysd.drop) == [], method
         assert check_reversed_rounds(sysd.fwd_rounds,
                                      sysd.bwd_rounds) == [], method
+
+
+@settings(max_examples=15, deadline=None)
+@given(kind=st.sampled_from(["graph", "lap2d"]), size=st.integers(0, 8),
+       seed=st.integers(0, 10_000), bs=st.sampled_from([1, 2, 4, 8, 16]))
+def test_vectorized_block_builder_matches_legacy_walk(kind, size, seed, bs):
+    """The windowed array-program block builder is bitwise-equal to the
+    legacy Python walk: same blocks (members and order), and — through
+    the shared coloring stage — the same BMC permutation."""
+    from repro.core.coloring import (BlockPartition, _build_blocks_walk,
+                                     build_blocks, color_blocks)
+    a = _random_instance(kind, size, seed)
+    walk = _build_blocks_walk(a, bs)
+    part = build_blocks(a, bs)
+    assert part.tolists() == walk
+    walk_part = BlockPartition(
+        members=np.concatenate(
+            [np.asarray(b, dtype=np.int64) for b in walk]),
+        lens=np.array([len(b) for b in walk], dtype=np.int64))
+    fast = color_blocks(a, part, bs)
+    oracle = color_blocks(a, walk_part, bs)
+    np.testing.assert_array_equal(fast.perm, oracle.perm)
+    np.testing.assert_array_equal(fast.is_dummy, oracle.is_dummy)
+
+
+@settings(max_examples=10, deadline=None)
+@given(kind=st.sampled_from(["graph", "lap2d"]), size=st.integers(0, 8),
+       seed=st.integers(0, 10_000), bs=st.sampled_from([2, 4, 8]),
+       w=st.sampled_from([2, 3, 4]))
+def test_levelset_rounds_prove_race_free(kind, size, seed, bs, w):
+    """scheduler="levelset" rounds satisfy the same static race contract
+    as the coloring rounds, for every ordering method."""
+    a = _random_instance(kind, size, seed)
+    for method in METHODS:
+        sysd = _order_system(sp.csr_matrix(a), None, method, bs, w,
+                             scheduler="levelset")
+        assert check_rounds(sysd.a_bar, sysd.fwd_rounds,
+                            drop_mask=sysd.drop) == [], method
+        assert check_reversed_rounds(sysd.fwd_rounds,
+                                     sysd.bwd_rounds) == [], method
+        # every (non-dummy) row appears in exactly one forward round
+        seen = np.concatenate(sysd.fwd_rounds)
+        assert len(seen) == sysd.n_padded
+        assert len(np.unique(seen)) == sysd.n_padded
+
+
+def test_levelset_plans_match_coloring_on_paper_generators():
+    """scheduler="levelset" passes the full schedule audit and reproduces
+    the coloring scheduler's solutions on every paper generator."""
+    import pytest  # noqa: F401  (kept local: file runs under the stub too)
+
+    from repro.core import build_plan
+    from repro.core.matrices import PAPER_PROBLEMS, PAPER_SHIFTS, paper_problem
+    for name in PAPER_PROBLEMS:
+        a, _ = paper_problem(name, "tiny")
+        shift = PAPER_SHIFTS.get(name, 0.0)
+        b = np.random.default_rng(7).normal(size=a.shape[0])
+        xs = {}
+        for scheduler in ("coloring", "levelset"):
+            plan = build_plan(a, method="hbmc", block_size=8, w=4,
+                              shift=shift, scheduler=scheduler,
+                              validate="full")
+            rep = plan.solve(b, rtol=1e-9, maxiter=6000)
+            assert rep.result.converged, (name, scheduler)
+            assert rep.scheduler == scheduler
+            xs[scheduler] = rep.x
+        scale = np.linalg.norm(xs["coloring"])
+        err = np.linalg.norm(xs["levelset"] - xs["coloring"]) / scale
+        assert err < 1e-6, (name, err)
